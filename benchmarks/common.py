@@ -1,0 +1,58 @@
+"""Benchmark utilities: timing, CSV emission, shared GSPN inputs."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gspn as G
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def make_gspn_inputs(batch: int, channels: int, h: int, w: int,
+                     channel_shared: bool = True, seed: int = 0,
+                     dtype=jnp.float32):
+    """Inputs for the canonical scan: x/lam (B*C, H, W); taps (Gw, H, W)."""
+    g = batch * channels
+    gw = batch if channel_shared else g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (g, h, w), dtype)
+    lam = jax.nn.sigmoid(jax.random.normal(ks[1], (g, h, w))).astype(dtype)
+    wl, wc, wr = G.normalize_taps(
+        jax.random.normal(ks[2], (gw, h, w, 3)))
+    return x, wl.astype(dtype), wc.astype(dtype), wr.astype(dtype), lam
+
+
+def scan_bytes(batch, channels, h, w, channel_shared=True, dtype_bytes=4):
+    """Analytic HBM traffic of one fused directional scan: read x, λ, taps,
+    write h (the carry stays on-chip — the GSPN-2 design point)."""
+    g = batch * channels
+    gw = batch if channel_shared else g
+    per_plane = h * w * dtype_bytes
+    return (2 * g + 3 * gw + g) * per_plane     # x, lam reads + 3 taps + h
+
+def scan_flops(batch, channels, h, w):
+    """4 FMAs per element per directional pass."""
+    return batch * channels * h * w * 8

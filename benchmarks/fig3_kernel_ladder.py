@@ -1,0 +1,72 @@
+"""Figure 3 — step-by-step kernel-optimisation ladder.
+
+The paper measures cumulative CUDA optimisations on an A100 (71.4 ms →
+1.8 ms, 40×).  This container has no GPU, so we reproduce the ladder
+*structurally* on CPU/XLA: each stage maps onto the TPU/XLA analogue of
+the paper's CUDA change (DESIGN.md §2), and the derived column reports
+the cumulative speedup for direct comparison against the paper's ratios.
+
+Stages:
+  gspn1_per_step     one dispatch per scan line, hidden state round-trips
+                     through device memory (the GSPN-1 pathology)
+  +fused_scan        the whole scan in ONE compiled program (kernel fuse)
+  +coalesced         scan axis chosen so the vector axis is contiguous
+                     (the strided variant emulates GSPN-1's layout)
+  +channel_shared    GSPN-2 compact propagation: one tap set per position
+                     shared by all channels (3× fewer weight bytes)
+  +proxy_compress    propagate in C_proxy=8 ≪ C space (paper §4.2)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, make_gspn_inputs, time_fn
+from repro.kernels import ref as R
+from repro.kernels.ops import gspn_scan
+
+# CPU-scaled configuration (paper: 1024×1024, B=16, C=8 on A100).
+B, C, H, W = 4, 8, 256, 256
+CP = 2   # proxy dim for the final stage
+
+
+def run():
+    x, wl, wc, wr, lam = make_gspn_inputs(B, C, H, W, channel_shared=False)
+
+    # Stage 0: GSPN-1 — per-line dispatch, blocking between lines.
+    t0 = time_fn(
+        lambda: R.gspn_scan_per_step(x, wl, wc, wr, lam, block=True),
+        iters=2)
+    emit("fig3/gspn1_per_step_ms", t0 * 1e6, f"cum_speedup=1.00")
+
+    # Stage 1: fused scan, but strided layout (scan over the CONTIGUOUS
+    # axis => vector ops hit strided memory, like GSPN-1's accesses).
+    xs = jnp.swapaxes(x, 1, 2).copy()
+    ws = [jnp.swapaxes(a, 1, 2).copy() for a in (wl, wc, wr)]
+    lams = jnp.swapaxes(lam, 1, 2).copy()
+    fused_strided = jax.jit(lambda *a: jnp.swapaxes(
+        gspn_scan(a[0], a[1], a[2], a[3], a[4], impl="xla"), 1, 2))
+    t1 = time_fn(fused_strided, xs, *ws, lams)
+    emit("fig3/fused_scan_ms", t1 * 1e6, f"cum_speedup={t0/t1:.2f}")
+
+    # Stage 2: + coalesced layout (vector axis contiguous).
+    fused = jax.jit(lambda *a: gspn_scan(*a, impl="xla"))
+    t2 = time_fn(fused, x, wl, wc, wr, lam)
+    emit("fig3/coalesced_ms", t2 * 1e6, f"cum_speedup={t0/t2:.2f}")
+
+    # Stage 3: + channel-shared taps (compact propagation).
+    x2, wl2, wc2, wr2, lam2 = make_gspn_inputs(B, C, H, W,
+                                               channel_shared=True)
+    t3 = time_fn(fused, x2, wl2, wc2, wr2, lam2)
+    emit("fig3/channel_shared_ms", t3 * 1e6, f"cum_speedup={t0/t3:.2f}")
+
+    # Stage 4: + compressive proxy (C -> CP).
+    x3, wl3, wc3, wr3, lam3 = make_gspn_inputs(B, CP, H, W,
+                                               channel_shared=True)
+    t4 = time_fn(fused, x3, wl3, wc3, wr3, lam3)
+    emit("fig3/proxy_compress_ms", t4 * 1e6,
+         f"cum_speedup={t0/t4:.2f};paper_cum=40.0")
+    return {"cum_speedup": t0 / t4}
+
+
+if __name__ == "__main__":
+    run()

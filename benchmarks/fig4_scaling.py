@@ -1,0 +1,54 @@
+"""Figure 4 / S2 — runtime scaling with image size, batch and channels.
+
+Paper: GSPN-2's advantage over GSPN-1 grows with resolution (36.8× fwd at
+1024²) and stays 2–4×+ at large batch/channel counts.  We measure the
+fused-vs-per-step ratio over the same axes (CPU-scaled sizes) and fit the
+scaling exponent of the fused scan (expect ≈ linear in pixel count — the
+O(√N) sequential claim is about *steps*, total work stays O(N))."""
+
+import math
+
+import jax
+
+from benchmarks.common import emit, make_gspn_inputs, time_fn
+from repro.kernels import ref as R
+from repro.kernels.ops import gspn_scan
+
+
+def run():
+    fused = jax.jit(lambda *a: gspn_scan(*a, impl="xla"))
+
+    # axis 1: image size
+    sizes = [64, 128, 256]
+    ts = []
+    for s in sizes:
+        x, wl, wc, wr, lam = make_gspn_inputs(2, 8, s, s)
+        tf = time_fn(fused, x, wl, wc, wr, lam)
+        tp = time_fn(lambda: R.gspn_scan_per_step(
+            x, wl, wc, wr, lam, block=True), iters=1)
+        ts.append(tf)
+        emit(f"fig4/size_{s}", tf * 1e6, f"speedup_vs_gspn1={tp/tf:.1f}")
+    exp = math.log(ts[-1] / ts[0]) / math.log((sizes[-1] / sizes[0]) ** 2)
+    emit("fig4/size_scaling_exponent", 0.0,
+         f"time~pixels^{exp:.2f};expect~1.0")
+
+    # axis 2: batch
+    for b in (1, 4, 16):
+        x, wl, wc, wr, lam = make_gspn_inputs(b, 8, 128, 128)
+        tf = time_fn(fused, x, wl, wc, wr, lam)
+        emit(f"fig4/batch_{b}", tf * 1e6, "")
+
+    # axis 3: channels (per-channel GSPN-1 weights vs shared GSPN-2)
+    for c in (8, 32, 128):
+        x1, wl1, wc1, wr1, lam1 = make_gspn_inputs(1, c, 128, 128,
+                                                   channel_shared=False)
+        x2, wl2, wc2, wr2, lam2 = make_gspn_inputs(1, c, 128, 128,
+                                                   channel_shared=True)
+        t1 = time_fn(fused, x1, wl1, wc1, wr1, lam1)
+        t2 = time_fn(fused, x2, wl2, wc2, wr2, lam2)
+        emit(f"fig4/channels_{c}", t2 * 1e6,
+             f"shared_vs_perchannel_speedup={t1/t2:.2f}")
+
+
+if __name__ == "__main__":
+    run()

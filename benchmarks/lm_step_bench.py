@@ -1,0 +1,46 @@
+"""Framework overhead: per-arch reduced-config train-step throughput on
+CPU (tokens/s) — one row per assigned architecture."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.all_archs import ASSIGNED, EXTRAS
+from repro.configs.base import get_arch
+from repro.models.lm import init_lm, lm_loss
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def run():
+    b, s = 4, 64
+    for arch in ASSIGNED + EXTRAS:
+        cfg = get_arch(arch).reduced()
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        ocfg = AdamWConfig()
+        opt = adamw_init(ocfg, params)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                    cfg.vocab)
+        batch = {"tokens": tokens, "labels": tokens}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(2), (b, s // 2, cfg.d_model))
+        if cfg.family == "audio":
+            batch["enc_frames"] = jax.random.normal(
+                jax.random.PRNGKey(3), (b, cfg.enc_len, cfg.d_model))
+
+        @jax.jit
+        def step(params, opt, batch):
+            (loss, _), g = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, batch), has_aux=True)(params)
+            params, opt, _ = adamw_update(ocfg, g, opt, params)
+            return params, opt, loss
+
+        t = time_fn(lambda: step(params, opt, batch), iters=2)
+        emit(f"lm_step/{arch}", t * 1e6,
+             f"tokens_per_s={b*s/t:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,table1,...]
+"""
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("fig3", "benchmarks.fig3_kernel_ladder"),
+    ("table1", "benchmarks.table1_throughput"),
+    ("fig4", "benchmarks.fig4_scaling"),
+    ("table2", "benchmarks.table2_imagenet"),
+    ("tables2", "benchmarks.tables2_proxy"),
+    ("lm_step", "benchmarks.lm_step_bench"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failed = []
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(modname)
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failed.append(key)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

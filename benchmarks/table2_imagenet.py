@@ -1,0 +1,34 @@
+"""Table 2 — ImageNet efficiency columns (params / MACs).
+
+Accuracy cannot be reproduced without ImageNet + accelerators; the
+efficiency columns CAN: parameter counts and MACs of GSPN-2-T/S/B at 224²
+against the paper's numbers (24M/4.2G, 50M/9.2G, 89M/14.2G), plus the
+GSPN-1-mode comparison (paper: GSPN-T = 30M/5.3G)."""
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.gspn2_vision import GSPN2_B, GSPN2_S, GSPN2_T, GSPN1_T
+from repro.models.vision import init_vision, vision_macs
+
+PAPER = {
+    "gspn2-t": (24e6, 4.2e9), "gspn2-s": (50e6, 9.2e9),
+    "gspn2-b": (89e6, 14.2e9), "gspn1-t": (30e6, 5.3e9),
+}
+
+
+def run():
+    for cfg in (GSPN2_T, GSPN2_S, GSPN2_B, GSPN1_T):
+        shapes = jax.eval_shape(lambda k, c=cfg: init_vision(k, c),
+                                jax.random.PRNGKey(0))
+        n = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(shapes))
+        macs = vision_macs(cfg)
+        p_n, p_m = PAPER[cfg.name]
+        emit(f"table2/{cfg.name}", 0.0,
+             f"params={n/1e6:.1f}M(paper {p_n/1e6:.0f}M);"
+             f"macs={macs/1e9:.2f}G(paper {p_m/1e9:.1f}G)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Quickstart: the GSPN-2 propagation layer in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows (1) the raw 4-directional line scan, (2) that it equals the dense
+Eq.-4 affinity-matrix form, (3) the full GSPN-2 attention module with
+compact channel propagation, and (4) gradients flowing through the fused
+custom-VJP scan.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gspn as G
+from repro.kernels import ref as R
+from repro.kernels.ops import gspn_scan
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    b, c, h, w = 2, 4, 16, 16
+
+    # --- 1. raw scan ------------------------------------------------------
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (b * c, h, w))
+    lam = jax.nn.sigmoid(jax.random.normal(ks[1], (b * c, h, w)))
+    # channel-shared taps (GSPN-2 compact mode): one tap set per image
+    wl, wc, wr = G.normalize_taps(jax.random.normal(ks[2], (b, h, w, 3)))
+    hidden = gspn_scan(x, wl, wc, wr, lam)
+    print(f"line scan: x{x.shape} -> h{hidden.shape}")
+    print(f"  row-stochastic taps: wl+wc+wr = "
+          f"{float((wl + wc + wr).mean()):.6f} (exactly 1)")
+
+    # --- 2. equals the dense attention-like form (paper Eq. 4) ------------
+    dense = R.gspn_dense_oracle(x, wl, wc, wr, lam)
+    print(f"  max |scan - dense Eq.4| = "
+          f"{float(jnp.abs(hidden - dense).max()):.2e}")
+
+    # --- 3. four-directional GSPN-2 attention module -----------------------
+    cfg = G.GSPNAttentionConfig(dim=32, proxy_dim=8)
+    params = G.init_gspn_attention(jax.random.PRNGKey(1), cfg)
+    img = jax.random.normal(jax.random.PRNGKey(2), (b, h, w, 32))
+    y = G.apply_gspn_attention(params, img, cfg)
+    print(f"GSPN-2 attention: {img.shape} -> {y.shape} "
+          f"(proxy C {cfg.dim}->{cfg.proxy_dim}, "
+          f"directions={list(cfg.directions)})")
+
+    # --- 4. gradients through the fused scan --------------------------------
+    def loss(p):
+        return jnp.sum(G.apply_gspn_attention(p, img, cfg) ** 2)
+
+    grads = jax.grad(loss)(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    print(f"grad norm through custom-VJP scan: {float(gnorm):.3f}")
+    assert np.isfinite(float(gnorm))
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

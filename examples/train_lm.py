@@ -1,0 +1,76 @@
+"""End-to-end LM training driver.
+
+    PYTHONPATH=src python examples/train_lm.py --preset small --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+Runs the full production path: config → sharded train step (single device
+here; the identical code path drives the 512-chip meshes via
+repro.launch.train) → fault-tolerant trainer with checkpointing → loss
+curve.  ``--mixer gspn`` swaps attention for the paper's GSPN-2 sequence
+mixer (beyond-paper LM adaptation, DESIGN.md §4).
+"""
+
+import argparse
+import logging
+
+import jax
+
+from repro.data.pipeline import DataConfig
+from repro.models.lm import LMConfig, count_params, init_lm
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    # ~15M params: fast on CPU
+    "small": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                  d_ff=1024, vocab=8192),
+    # ~100M params: the "train a ~100M model for a few hundred steps"
+    # deliverable configuration (several hours on this CPU container;
+    # minutes on one accelerator host)
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=3072, vocab=32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mixer", default="attn", choices=["attn", "gspn"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(message)s")
+
+    p = PRESETS[args.preset]
+    cfg = LMConfig(
+        name=f"{args.preset}-{args.mixer}", family="dense",
+        unit=((args.mixer, p["n_layers"]),), n_units=1,
+        gspn_proxy_dim=8, gspn_row_width=32, remat="none", **p)
+    n = count_params(init_lm(jax.random.PRNGKey(0), cfg))
+    print(f"model: {cfg.name}  params={n/1e6:.1f}M  "
+          f"mixer={args.mixer}  device={jax.devices()[0].platform}")
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    trainer = Trainer(
+        cfg,
+        AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                    total_steps=args.steps),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                   global_batch=args.batch),
+        TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10),
+        mesh=mesh)
+    trainer.init_or_restore()
+    hist = trainer.run(args.steps)
+    print(f"loss: {hist[0]:.4f} -> {hist[-1]:.4f} over {len(hist)} steps "
+          f"({trainer.recoveries} recoveries, {trainer.stragglers} "
+          f"straggler events)")
+
+
+if __name__ == "__main__":
+    main()

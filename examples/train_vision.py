@@ -1,0 +1,67 @@
+"""Train a (reduced) GSPN-2 vision classifier — the paper's own model —
+on synthetic class-conditional images; accuracy climbs well above chance.
+
+    PYTHONPATH=src python examples/train_vision.py --steps 60
+"""
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gspn2_vision import reduced_vision
+from repro.data.pipeline import DataConfig, synth_images
+from repro.models.lm import count_params
+from repro.models.vision import apply_vision, init_vision, vision_loss
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = reduced_vision()
+    params = init_vision(jax.random.PRNGKey(0), cfg)
+    print(f"GSPN-2 classifier ({cfg.name}): "
+          f"{count_params(params)/1e3:.0f}K params, "
+          f"C_proxy={cfg.proxy_dim}, img {cfg.img_size}²")
+
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps,
+                       weight_decay=0.01)
+    opt = adamw_init(ocfg, params)
+    dcfg = DataConfig(vocab=1, seq_len=1, global_batch=args.batch)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: vision_loss(p, cfg, batch), has_aux=True)(params)
+        params, opt, _ = adamw_update(ocfg, g, opt, params)
+        return params, opt, loss
+
+    @jax.jit
+    def accuracy(params, batch):
+        logits = apply_vision(params, batch["images"], cfg)
+        return jnp.mean(jnp.argmax(logits, -1) == batch["labels"])
+
+    for s in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in
+                 synth_images(dcfg, s, cfg.img_size, cfg.n_classes).items()}
+        params, opt, loss = step(params, opt, batch)
+        if s % 10 == 0 or s == args.steps - 1:
+            test = {k: jnp.asarray(v) for k, v in
+                    synth_images(dcfg, 10_000 + s, cfg.img_size,
+                                 cfg.n_classes).items()}
+            acc = float(accuracy(params, test))
+            print(f"step {s:4d}  loss {float(loss):.3f}  "
+                  f"held-out acc {acc:.2f} (chance {1/cfg.n_classes:.2f})")
+    assert acc > 2.0 / cfg.n_classes, "no learning"
+    print("vision training OK")
+
+
+if __name__ == "__main__":
+    main()

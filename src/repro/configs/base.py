@@ -1,0 +1,102 @@
+"""Config registry and input-shape catalogue.
+
+Every assigned architecture registers a ``full(n_model_shards)`` LMConfig
+(the exact published dims) and a ``reduced()`` config of the same family
+for CPU smoke tests.  ``input_specs`` builds ShapeDtypeStruct stand-ins for
+every (arch × shape) dry-run cell without allocating anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    name: str
+    family: str
+    full: Callable[..., LMConfig]
+    reduced: Callable[[], LMConfig]
+    # cells skipped per assignment rules, with reasons (DESIGN.md §4)
+    skip_shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    source: str = ""
+
+
+REGISTRY: Dict[str, ArchEntry] = {}
+
+
+def register(entry: ArchEntry):
+    REGISTRY[entry.name] = entry
+    return entry
+
+
+def get_arch(name: str) -> ArchEntry:
+    if name not in REGISTRY:
+        import repro.configs.all_archs  # noqa: F401 — populate registry
+    return REGISTRY[name]
+
+
+def list_archs():
+    import repro.configs.all_archs  # noqa: F401
+    return sorted(REGISTRY)
+
+
+FULL_ATTENTION_SKIP = (
+    "full attention is quadratic in context; assignment rule: skip "
+    "long_500k for pure full-attention archs (decode itself is O(L) but "
+    "the rule is applied as written; see DESIGN.md §4)")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct only — no allocation).
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec, *, vision_len: int = 1024):
+    """Returns (kind, kwargs-of-ShapeDtypeStructs) for the dry-run lowering."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, min(vision_len, s // 2), cfg.d_model), f32)
+        if cfg.family == "audio":
+            batch["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_len, cfg.d_model), f32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, min(vision_len, s // 2), cfg.d_model), f32)
+        if cfg.family == "audio":
+            batch["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_len, cfg.d_model), f32)
+        return batch
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,37 @@
+"""grok-1-314b — 8 experts top-2 [hf:xai-org/grok-1; unverified].
+
+64L d_model=6144 48H (kv=8) d_ff=32768 vocab=131072, MoE 8e top-2.
+With 8 experts on a 16-way model axis the MoE slabs use ep=8, tp=2
+(each expert's hidden dim split over two shards — see moe.py).
+"""
+
+from repro.configs.base import ArchEntry, register, FULL_ATTENTION_SKIP
+from repro.models.lm import LMConfig
+
+
+def full(n_model_shards: int = 1) -> LMConfig:
+    return LMConfig(
+        name="grok-1-314b", family="moe",
+        n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=32768, vocab=131072, rope_theta=1e4,
+        n_experts=8, top_k=2, moe_d_ff=32768,
+        capacity_factor=1.25,
+        unit=(("attn_moe", 64),), n_units=1,
+        n_model_shards=n_model_shards,
+    )
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="grok-reduced", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=512,
+        n_experts=4, top_k=2, moe_d_ff=128, capacity_factor=2.0,
+        unit=(("attn_moe", 2),), n_units=1, remat="none",
+    )
+
+
+register(ArchEntry(
+    name="grok-1-314b", family="moe", full=full, reduced=reduced,
+    skip_shapes={"long_500k": FULL_ATTENTION_SKIP},
+    source="hf:xai-org/grok-1 (unverified)"))

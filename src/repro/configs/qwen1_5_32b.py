@@ -1,0 +1,32 @@
+"""qwen1.5-32b — MHA with QKV bias [hf:Qwen/Qwen1.5-0.5B; hf].
+
+64L d_model=5120 40H (kv=40) d_ff=27392 vocab=152064.
+"""
+
+from repro.configs.base import ArchEntry, register, FULL_ATTENTION_SKIP
+from repro.models.lm import LMConfig
+
+
+def full(n_model_shards: int = 1) -> LMConfig:
+    return LMConfig(
+        name="qwen1.5-32b", family="dense",
+        n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40,
+        d_ff=27392, vocab=152064, qkv_bias=True, rope_theta=1e6,
+        unit=(("attn", 64),), n_units=1,
+        n_model_shards=n_model_shards,
+    )
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="qwen1.5-reduced", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=160, vocab=512, qkv_bias=True,
+        unit=(("attn", 2),), n_units=1, remat="none",
+    )
+
+
+register(ArchEntry(
+    name="qwen1.5-32b", family="dense", full=full, reduced=reduced,
+    skip_shapes={"long_500k": FULL_ATTENTION_SKIP},
+    source="hf:Qwen/Qwen1.5-0.5B"))

@@ -1,0 +1,38 @@
+"""qwen2-1.5b-gspn — BEYOND-PAPER variant: qwen2-1.5b dims with the
+GSPN-2 sequence mixer replacing attention.
+
+Demonstrates the paper's technique unlocking the long_500k cell for a
+dense-arch configuration: the GSPN mixer is O(√L)-sequential with an
+O(√L) decode cache (DESIGN.md §4).  Row width 1024 ⇒ 512×1024 grid at
+524288 tokens.
+"""
+
+from repro.configs.base import ArchEntry, register
+from repro.models.lm import LMConfig
+
+
+def full(n_model_shards: int = 1) -> LMConfig:
+    return LMConfig(
+        name="qwen2-1.5b-gspn", family="dense",
+        n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+        d_ff=8960, vocab=151936, tie_embeddings=True,
+        gspn_proxy_dim=8, gspn_row_width=1024,
+        unit=(("gspn", 28),), n_units=1,
+        n_model_shards=n_model_shards,
+    )
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="qwen2-gspn-reduced", family="dense",
+        n_layers=2, d_model=48, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=512, tie_embeddings=True,
+        gspn_proxy_dim=4, gspn_row_width=8,
+        unit=(("gspn", 2),), n_units=1, remat="none",
+    )
+
+
+register(ArchEntry(
+    name="qwen2-1.5b-gspn", family="dense", full=full, reduced=reduced,
+    skip_shapes={},   # GSPN mixer: sub-quadratic, all shapes run
+    source="beyond-paper variant (this work)"))

@@ -1,0 +1,37 @@
+"""qwen2-vl-72b — M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+80L d_model=8192 64H (kv=8) d_ff=29568 vocab=152064.  The vision frontend
+is a STUB per the assignment: input_specs provides precomputed patch
+embeddings (B, S_vis, D) spliced into the first S_vis positions; M-RoPE
+drives the backbone with 3-plane position ids (head_dim 128 → sections
+16/24/24 frequency slots).
+"""
+
+from repro.configs.base import ArchEntry, register, FULL_ATTENTION_SKIP
+from repro.models.lm import LMConfig
+
+
+def full(n_model_shards: int = 1) -> LMConfig:
+    return LMConfig(
+        name="qwen2-vl-72b", family="vlm",
+        n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=29568, vocab=152064, qkv_bias=True, rope_theta=1e6,
+        mrope_sections=(16, 24, 24),
+        unit=(("attn", 80),), n_units=1,
+        n_model_shards=n_model_shards,
+    )
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="qwen2-vl-reduced", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=160, vocab=512, qkv_bias=True, mrope_sections=(4, 2, 2),
+        unit=(("attn", 2),), n_units=1, remat="none",
+    )
+
+
+register(ArchEntry(
+    name="qwen2-vl-72b", family="vlm", full=full, reduced=reduced,
+    skip_shapes={"long_500k": FULL_ATTENTION_SKIP},
+    source="arXiv:2409.12191"))

@@ -1,0 +1,40 @@
+"""whisper-base — enc-dec, conv frontend (stub) [arXiv:2212.04356;
+unverified].
+
+6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865.  Encoder: 6 bidirectional
+layers over stub frame embeddings (enc_len=1500 ≙ 30 s); decoder: 6 layers
+with cross-attention.  GELU MLP + LayerNorm per the original.  Deviations
+(DESIGN.md §7): rotary instead of learned positions in the decoder; 32k/
+500k decode cells far exceed Whisper's trained 448-token context and are
+lowered shape-only.
+"""
+
+from repro.configs.base import ArchEntry, register, FULL_ATTENTION_SKIP
+from repro.models.lm import LMConfig
+
+
+def full(n_model_shards: int = 1) -> LMConfig:
+    return LMConfig(
+        name="whisper-base", family="audio",
+        n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+        d_ff=2048, vocab=51865, mlp="gelu", norm="layernorm",
+        encoder_layers=6, enc_len=1500, rope_theta=1e4,
+        unit=(("xattn", 6),), n_units=1,
+        n_model_shards=n_model_shards,
+    )
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="whisper-reduced", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=512, mlp="gelu", norm="layernorm",
+        encoder_layers=2, enc_len=32,
+        unit=(("xattn", 2),), n_units=1, remat="none",
+    )
+
+
+register(ArchEntry(
+    name="whisper-base", family="audio", full=full, reduced=reduced,
+    skip_shapes={"long_500k": FULL_ATTENTION_SKIP},
+    source="arXiv:2212.04356 (unverified)"))

@@ -1,0 +1,36 @@
+"""xlstm-1.3b — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+48L d_model=2048 4H d_ff=0 vocab=50304.  xLSTM blocks carry their own
+up/down projections (expand=2), so d_ff=0 (no separate FFN) is faithful.
+Pattern: 7 mLSTM + 1 sLSTM per unit × 6 units = 48 layers.
+"""
+
+from repro.configs.base import (ArchEntry, register, SHAPES)
+from repro.models.lm import LMConfig
+
+
+def full(n_model_shards: int = 1) -> LMConfig:
+    return LMConfig(
+        name="xlstm-1.3b", family="ssm",
+        n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab=50304,
+        unit=(("mlstm", 7), ("slstm", 1)), n_units=6,
+        gla_chunk=256,
+        n_model_shards=n_model_shards,
+    )
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="xlstm-reduced", family="ssm",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab=512,
+        unit=(("mlstm", 1), ("slstm", 1)), n_units=2,
+        gla_chunk=32, remat="none",
+    )
+
+
+register(ArchEntry(
+    name="xlstm-1.3b", family="ssm", full=full, reduced=reduced,
+    skip_shapes={},   # sub-quadratic: all four shapes run
+    source="arXiv:2405.04517 (unverified)"))

@@ -1,0 +1,36 @@
+"""zamba2-2.7b — Mamba2 + shared attention blocks [arXiv:2411.15242; hf].
+
+54L d_model=2560 32H (kv=32) d_ff=10240 vocab=32000, ssm_state=64.
+Structure: 54 Mamba2 layers; one weight-SHARED attention block applied
+after every 6 Mamba layers (9 applications, 1 weight set).
+"""
+
+from repro.configs.base import ArchEntry, register
+from repro.models.lm import LMConfig
+
+
+def full(n_model_shards: int = 1) -> LMConfig:
+    return LMConfig(
+        name="zamba2-2.7b", family="hybrid",
+        n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+        d_ff=10240, vocab=32000, ssm_state=64, ssm_head_dim=64,
+        unit=(("mamba", 6),), n_units=9, shared_attn=True,
+        gla_chunk=256,
+        n_model_shards=n_model_shards,
+    )
+
+
+def reduced() -> LMConfig:
+    return LMConfig(
+        name="zamba2-reduced", family="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=512, ssm_state=16, ssm_head_dim=16,
+        unit=(("mamba", 2),), n_units=2, shared_attn=True,
+        gla_chunk=32, remat="none",
+    )
+
+
+register(ArchEntry(
+    name="zamba2-2.7b", family="hybrid", full=full, reduced=reduced,
+    skip_shapes={},   # Mamba2 decode is O(1); shared-attn KV is seq-sharded
+    source="arXiv:2411.15242"))

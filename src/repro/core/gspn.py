@@ -1,0 +1,321 @@
+"""GSPN-2 core algorithm (paper §3.2, §4.2).
+
+Building blocks:
+
+* :func:`normalize_taps` — Stability–Context row-stochastic normalisation of
+  the 3-tap propagation logits (masked softmax; boundary taps excluded).
+* :func:`directional_scan` — maps the four directional passes (T→B, B→T,
+  L→R, R→L) onto the canonical top-to-bottom kernel scan via flips and
+  transposes (the TPU analogue of the paper's per-direction CUDA streams:
+  directions become batched data parallelism).
+* :class:`GSPNAttentionConfig` + ``init/apply_gspn_attention`` — the full
+  GSPN-2 attention module with **compact channel propagation**:
+  channel-shared affinity taps and a compressive proxy space
+  ``C → C_proxy → C`` (paper §4.2, App. D).
+* ``init/apply_gspn_seq_mixer`` — the 1D-sequence adaptation used as a
+  sub-quadratic causal token mixer for language models (DESIGN.md §4):
+  fold L → (H, W), causal T→B 2D scan + causal within-row scan.
+
+All modules are functional: ``init_*(key, cfg) -> params`` (pytree of
+jnp arrays) and ``apply_*(params, x, cfg) -> y``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import gspn_scan
+
+DIRECTIONS = ("tb", "bt", "lr", "rl")
+
+
+# ---------------------------------------------------------------------------
+# Tap normalisation (Stability–Context condition).
+# ---------------------------------------------------------------------------
+
+def normalize_taps(logits, mode: str = "softmax"):
+    """Row-stochastic 3-tap weights from logits.
+
+    logits: (..., W, 3) — per spatial position, taps (left, center, right)
+    referring to previous-row neighbours (j-1, j, j+1).  Boundary taps are
+    masked (j=0 has no left neighbour; j=W-1 no right), so each row of the
+    implied tridiagonal matrix sums to exactly 1 ⇒ non-expansive scan.
+
+    Returns (wl, wc, wr), each (..., W), dtype f32.
+    """
+    w = logits.shape[-2]
+    logits = logits.astype(jnp.float32)
+    j = jnp.arange(w)
+    neg = jnp.finfo(jnp.float32).min
+    mask = jnp.stack([
+        jnp.where(j == 0, neg, 0.0),        # left tap invalid at j=0
+        jnp.zeros((w,)),                    # center always valid
+        jnp.where(j == w - 1, neg, 0.0),    # right tap invalid at j=W-1
+    ], axis=-1)                             # (W, 3)
+    if mode == "softmax":
+        z = jax.nn.softmax(logits + mask, axis=-1)
+    elif mode == "abs":
+        a = jnp.abs(logits) * (mask == 0.0)
+        z = a / (a.sum(axis=-1, keepdims=True) + 1e-6)
+    else:
+        raise ValueError(mode)
+    return z[..., 0], z[..., 1], z[..., 2]
+
+
+# ---------------------------------------------------------------------------
+# Directional dispatch.
+# ---------------------------------------------------------------------------
+
+def _to_canonical(a, direction: str):
+    """Orient (..., H, W) so the canonical scan (top->bottom over axis -2)
+    realises the requested direction."""
+    if direction == "tb":
+        return a
+    if direction == "bt":
+        return jnp.flip(a, axis=-2)
+    if direction == "lr":
+        return jnp.swapaxes(a, -1, -2)
+    if direction == "rl":
+        return jnp.flip(jnp.swapaxes(a, -1, -2), axis=-2)
+    raise ValueError(direction)
+
+
+def _from_canonical(a, direction: str):
+    if direction == "tb":
+        return a
+    if direction == "bt":
+        return jnp.flip(a, axis=-2)
+    if direction == "lr":
+        return jnp.swapaxes(a, -1, -2)
+    if direction == "rl":
+        return jnp.swapaxes(jnp.flip(a, axis=-2), -1, -2)
+    raise ValueError(direction)
+
+
+def directional_scan(x, wl, wc, wr, lam, direction: str, **scan_kwargs):
+    """Run one directional pass.  x, lam: (G, H, W); w*: (G_w, H, W) in the
+    ORIGINAL orientation; tap logits must already be produced for the
+    oriented geometry (callers orient positions before generating taps, so
+    taps always refer to the scan geometry — see apply_gspn_attention)."""
+    h = gspn_scan(
+        _to_canonical(x, direction),
+        _to_canonical(wl, direction),
+        _to_canonical(wc, direction),
+        _to_canonical(wr, direction),
+        _to_canonical(lam, direction),
+        **scan_kwargs,
+    )
+    return _from_canonical(h, direction)
+
+
+# ---------------------------------------------------------------------------
+# GSPN-2 attention module (vision, channels-last).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GSPNAttentionConfig:
+    dim: int                       # C
+    proxy_dim: int = 8             # C_proxy (paper: 2..32; ImageNet uses 2)
+    directions: Sequence[str] = DIRECTIONS
+    channel_shared: bool = True    # GSPN-2 compact mode; False = GSPN-1 mode
+    chunk: int | None = None       # GSPN-local segment length (rows)
+    norm_mode: str = "softmax"
+    impl: str = "auto"             # kernel selection, see kernels.ops
+    param_dtype: jnp.dtype = jnp.float32
+
+
+def _dense_init(key, d_in, d_out, dtype):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.uniform(key, (d_in, d_out), jnp.float32,
+                               -scale, scale)).astype(dtype)
+
+
+def init_gspn_attention(key, cfg: GSPNAttentionConfig):
+    nd = len(cfg.directions)
+    cp = cfg.proxy_dim
+    tap_out = 3 * nd if cfg.channel_shared else 3 * nd * cp
+    keys = jax.random.split(key, 5)
+    return {
+        "down": _dense_init(keys[0], cfg.dim, cp, cfg.param_dtype),
+        # tap logits biased toward the identity-ish center tap at init
+        "w_taps": _dense_init(keys[1], cfg.dim, tap_out, cfg.param_dtype),
+        "w_lam": _dense_init(keys[2], cfg.dim, nd * cp, cfg.param_dtype),
+        "w_u": _dense_init(keys[3], cfg.dim, nd * cp, cfg.param_dtype),
+        "up": _dense_init(keys[4], cp, cfg.dim, cfg.param_dtype),
+    }
+
+
+def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig):
+    """x: (B, H, W, C) -> (B, H, W, C)."""
+    b, h, w, c = x.shape
+    nd = len(cfg.directions)
+    cp = cfg.proxy_dim
+    xf = x.astype(jnp.float32)
+
+    x_p = xf @ params["down"].astype(jnp.float32)          # (B,H,W,Cp)
+    taps = xf @ params["w_taps"].astype(jnp.float32)       # (B,H,W,3*nd[*Cp])
+    lam = jax.nn.sigmoid(xf @ params["w_lam"].astype(jnp.float32))
+    u = xf @ params["w_u"].astype(jnp.float32)             # (B,H,W,nd*Cp)
+
+    # (B, Cp, H, W) -> (B*Cp, H, W): channel-major grouping so that
+    # channels_per_weight = Cp matches the kernel's index_map convention.
+    def to_scan(a_bhwc, ch):
+        return jnp.moveaxis(a_bhwc, -1, 1).reshape(b * ch, h, w)
+
+    x_scan = to_scan(x_p, cp)
+    out = jnp.zeros((b, h, w, cp), jnp.float32)
+    for d_idx, direction in enumerate(cfg.directions):
+        if cfg.channel_shared:
+            tap_d = taps[..., 3 * d_idx:3 * (d_idx + 1)]   # (B,H,W,3)
+            # Orient positions first so taps refer to scan-local geometry.
+            tap_d = _to_canonical(jnp.moveaxis(tap_d, -1, 1), direction)
+            tap_d = jnp.moveaxis(tap_d, 1, -1)             # (B,H',W',3)
+            wl, wc_, wr = normalize_taps(tap_d, cfg.norm_mode)
+        else:
+            sl = taps[..., 3 * cp * d_idx:3 * cp * (d_idx + 1)]
+            sl = sl.reshape(b, h, w, cp, 3)
+            sl = jnp.moveaxis(sl, 3, 1).reshape(b * cp, h, w, 3)
+            sl = _to_canonical(jnp.moveaxis(sl, -1, 1), direction)
+            sl = jnp.moveaxis(sl, 1, -1)
+            wl, wc_, wr = normalize_taps(sl, cfg.norm_mode)
+
+        lam_d = to_scan(lam[..., cp * d_idx:cp * (d_idx + 1)], cp)
+        h_d = gspn_scan(
+            _to_canonical(x_scan, direction),
+            wl, wc_, wr,
+            _to_canonical(lam_d, direction),
+            chunk=cfg.chunk, impl=cfg.impl,
+        )
+        h_d = _from_canonical(h_d, direction)
+        h_d = jnp.moveaxis(h_d.reshape(b, cp, h, w), 1, -1)  # (B,H,W,Cp)
+        u_d = u[..., cp * d_idx:cp * (d_idx + 1)]
+        out = out + u_d * h_d
+
+    y = out @ params["up"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gspn_attention_param_count(cfg: GSPNAttentionConfig) -> int:
+    nd = len(cfg.directions)
+    cp = cfg.proxy_dim
+    tap_out = 3 * nd if cfg.channel_shared else 3 * nd * cp
+    return (cfg.dim * cp + cfg.dim * tap_out + 2 * cfg.dim * nd * cp
+            + cp * cfg.dim)
+
+
+# ---------------------------------------------------------------------------
+# 1D-sequence causal mixer (LM adaptation, DESIGN.md §4).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GSPNSeqConfig:
+    dim: int
+    proxy_dim: int = 8
+    row_width: int = 0             # 0 => ceil(sqrt(L)) at call time
+    channel_shared: bool = True
+    norm_mode: str = "softmax"
+    impl: str = "auto"
+    param_dtype: jnp.dtype = jnp.float32
+
+
+def init_gspn_seq_mixer(key, cfg: GSPNSeqConfig):
+    cp = cfg.proxy_dim
+    keys = jax.random.split(key, 6)
+    return {
+        "down": _dense_init(keys[0], cfg.dim, cp, cfg.param_dtype),
+        "w_taps": _dense_init(keys[1], cfg.dim, 3, cfg.param_dtype),
+        "w_row": _dense_init(keys[2], cfg.dim, 1, cfg.param_dtype),
+        "w_lam": _dense_init(keys[3], cfg.dim, 2 * cp, cfg.param_dtype),
+        "w_u": _dense_init(keys[4], cfg.dim, 2 * cp, cfg.param_dtype),
+        "up": _dense_init(keys[5], cp, cfg.dim, cfg.param_dtype),
+    }
+
+
+def _fold_len(l: int, row_width: int) -> tuple[int, int]:
+    w = row_width or 1 << max(1, math.ceil(math.log2(max(l, 4)) / 2))
+    h = -(-l // w)
+    return h, w
+
+
+def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
+                         return_cache: bool = False):
+    """Causal sub-quadratic token mixer.  x: (B, L, D) -> (B, L, D).
+
+    Fold the sequence row-major into (H, W); causality holds because:
+    * the T→B pass only reads row i-1, all of whose tokens precede row i;
+    * the within-row pass is a strictly left-to-right recurrence.
+
+    ``return_cache=True`` additionally returns the O(W) decode cache
+    (previous grid row + within-row state) for streaming generation.
+    """
+    b, l, d = x.shape
+    cp = cfg.proxy_dim
+    h, w = _fold_len(l, cfg.row_width)
+    pad = h * w - l
+    xf = x.astype(jnp.float32)
+
+    x_p = xf @ params["down"].astype(jnp.float32)            # (B,L,Cp)
+    taps = xf @ params["w_taps"].astype(jnp.float32)         # (B,L,3)
+    row_g = jax.nn.sigmoid(xf @ params["w_row"].astype(jnp.float32))
+    lam = jax.nn.sigmoid(xf @ params["w_lam"].astype(jnp.float32))
+    u = xf @ params["w_u"].astype(jnp.float32)
+
+    def fold(a):  # (B, L, K) -> (B*K, H, W)
+        k = a.shape[-1]
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        a = a.reshape(b, h, w, k)
+        return jnp.moveaxis(a, -1, 1).reshape(b * k, h, w)
+
+    def unfold(a, k):  # (B*K, H, W) -> (B, L, K)
+        a = jnp.moveaxis(a.reshape(b, k, h, w), 1, -1)
+        return a.reshape(b, h * w, k)[:, :l]
+
+    # Pass 1: causal T->B 2D scan in proxy space, channel-shared taps.
+    wl, wc_, wr = normalize_taps(fold(taps).reshape(b * 3, h, w)
+                                 .reshape(b, 3, h, w).transpose(0, 2, 3, 1),
+                                 cfg.norm_mode)
+    h_tb = gspn_scan(fold(x_p), wl, wc_, wr,
+                     fold(lam[..., :cp]), impl=cfg.impl)
+
+    # Pass 2: causal within-row scan — center-tap-only recurrence along W,
+    # realised as an 'lr'-oriented scan with chunk=1 row coupling removed
+    # (wl=wr=0 ⇒ h[j] = g·h[j-1] + lam·x[j] independently per row).
+    x_lr = _to_canonical(fold(x_p), "lr")
+    gate = _to_canonical(fold(jnp.broadcast_to(row_g, (b, l, 1))), "lr")
+    zeros = jnp.zeros_like(gate)
+    h_row = gspn_scan(x_lr, zeros, gate, zeros,
+                      _to_canonical(fold(lam[..., cp:]), "lr"),
+                      impl=cfg.impl)
+    h_row = _from_canonical(h_row, "lr")
+
+    y = (unfold(h_tb, cp) * u[..., :cp] + unfold(h_row, cp) * u[..., cp:])
+    y = y @ params["up"].astype(jnp.float32)
+    y = y.astype(x.dtype)
+    if not return_cache:
+        return y
+
+    # Build the streaming cache for position l (static shapes).
+    grid_tb = h_tb.reshape(b, cp, h, w)
+    grid_row = h_row.reshape(b, cp, h, w)
+    i_last, j_last = (l - 1) // w, (l - 1) % w
+    row_i = grid_tb[:, :, i_last, :]
+    if j_last == w - 1:
+        prev_row = row_i
+        cur_row = row_i
+    else:
+        prev_row = (grid_tb[:, :, i_last - 1, :] if i_last > 0
+                    else jnp.zeros_like(row_i))
+        col_mask = (jnp.arange(w) <= j_last).astype(jnp.float32)
+        cur_row = row_i * col_mask
+    cache = {
+        "prev_row": prev_row.astype(jnp.float32),
+        "cur_row": cur_row.astype(jnp.float32),
+        "row_state": grid_row[:, :, i_last, j_last].astype(jnp.float32),
+        "pos": jnp.full((b,), l, jnp.int32),
+    }
+    return y, cache

@@ -1,0 +1,189 @@
+"""Pallas TPU kernels for the GSPN-2 fused line scan.
+
+TPU adaptation of the paper's single-CUDA-kernel design (DESIGN.md §2):
+
+* the whole scan runs inside **one** ``pl.pallas_call`` — the grid walks
+  ``(G, H_tiles)`` sequentially and the row loop runs *inside* the kernel,
+  eliminating the per-step dispatches of GSPN-1;
+* the previous row's hidden state is staged in a **VMEM scratch carry**
+  that persists across sequential grid steps — the TPU analogue of the
+  paper's shared-memory staging of ``h[i-1]`` (it never round-trips to HBM);
+* W is the innermost (lane) dimension so the tridiagonal matvec becomes
+  three shifted vector FMAs on fully-coalesced tiles — the analogue of the
+  paper's coalesced-access layout;
+* channel-shared propagation weights are expressed through the BlockSpec
+  ``index_map`` (``g // channels_per_weight``) so the compact-channel mode
+  reads each weight tile once per channel group instead of materialising a
+  broadcast — the paper's compact channel propagation;
+* the channel-slice grid axis plays the role of the paper's 2D thread
+  blocks (spatial × cSlice).
+
+Array layout: ``x, lam, out: (G, H, W)``; ``wl, wc, wr: (G_w, H, W)`` with
+``G = G_w * channels_per_weight``.  All kernels compute in f32 and cast the
+output back to the input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_ROW_TILE = 256
+
+
+def pick_row_tile(h: int, cap: int = DEFAULT_ROW_TILE) -> int:
+    """Largest power-of-two divisor of ``h`` not exceeding ``cap``."""
+    t = 1
+    while t * 2 <= cap and h % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+def _row(ref, r):
+    """Load row ``r`` of a (1, TH, W) block as a (1, W) f32 tile."""
+    return ref[0, pl.dslice(r, 1), :].astype(jnp.float32)
+
+
+def _shift_right(v):
+    """(1, W): v[., j] -> v[., j-1], position 0 becomes 0."""
+    rolled = jnp.roll(v, 1, axis=1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
+    return jnp.where(idx == 0, 0.0, rolled)
+
+
+def _shift_left(v):
+    """(1, W): v[., j] -> v[., j+1], last position becomes 0."""
+    rolled = jnp.roll(v, -1, axis=1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
+    return jnp.where(idx == v.shape[1] - 1, 0.0, rolled)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel.
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(row_tile, chunk_tiles,
+                x_ref, wl_ref, wc_ref, wr_ref, lam_ref, o_ref, carry_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t % chunk_tiles == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    def body(r, h_prev):
+        h_new = (
+            _row(wl_ref, r) * _shift_right(h_prev)
+            + _row(wc_ref, r) * h_prev
+            + _row(wr_ref, r) * _shift_left(h_prev)
+            + _row(lam_ref, r) * _row(x_ref, r)
+        )
+        o_ref[0, pl.dslice(r, 1), :] = h_new.astype(o_ref.dtype)
+        return h_new
+
+    carry_ref[...] = jax.lax.fori_loop(0, row_tile, body, carry_ref[...])
+
+
+def gspn_scan_fwd_pallas(x, wl, wc, wr, lam, *, channels_per_weight: int = 1,
+                         chunk: int | None = None, row_tile: int | None = None,
+                         interpret: bool = True):
+    """Fused forward line scan.  Returns h: (G, H, W) in x.dtype."""
+    g, h, w = x.shape
+    cpw = channels_per_weight
+    assert wl.shape[0] * cpw == g, (wl.shape, g, cpw)
+    chunk = h if chunk is None else chunk
+    assert h % chunk == 0, (h, chunk)
+    row_tile = row_tile or pick_row_tile(min(h, chunk))
+    assert chunk % row_tile == 0, (chunk, row_tile)
+    chunk_tiles = chunk // row_tile
+
+    data_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi, ti, 0))
+    wt_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi // cpw, ti, 0))
+
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, row_tile, chunk_tiles),
+        grid=(g, h // row_tile),
+        in_specs=[data_spec, wt_spec, wt_spec, wt_spec, data_spec],
+        out_specs=data_spec,
+        out_shape=jax.ShapeDtypeStruct((g, h, w), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, wl, wc, wr, lam)
+
+
+# ---------------------------------------------------------------------------
+# Backward (adjoint) kernel.
+#
+# Runs on H-flipped arrays so the sequential grid walks rows from last to
+# first.  The carry holds the three tap*adjoint products of the previously
+# processed (i.e. next-in-original-order) row:
+#     g[i] = dy[i] + shift_left(wl[i+1]*g[i+1]) + wc[i+1]*g[i+1]
+#                  + shift_right(wr[i+1]*g[i+1])
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel(row_tile, chunk_tiles,
+                dy_ref, wl_ref, wc_ref, wr_ref, g_ref, carry_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t % chunk_tiles == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    def body(r, _):
+        prod_l = carry_ref[0, :, :]
+        prod_c = carry_ref[1, :, :]
+        prod_r = carry_ref[2, :, :]
+        g_row = (
+            _row(dy_ref, r)
+            + _shift_left(prod_l)
+            + prod_c
+            + _shift_right(prod_r)
+        )
+        g_ref[0, pl.dslice(r, 1), :] = g_row.astype(g_ref.dtype)
+        carry_ref[0, :, :] = _row(wl_ref, r) * g_row
+        carry_ref[1, :, :] = _row(wc_ref, r) * g_row
+        carry_ref[2, :, :] = _row(wr_ref, r) * g_row
+        return 0
+
+    jax.lax.fori_loop(0, row_tile, body, 0)
+
+
+def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, channels_per_weight: int = 1,
+                         chunk: int | None = None, row_tile: int | None = None,
+                         interpret: bool = True):
+    """Adjoint scan.  Inputs are in ORIGINAL orientation; flipping is done
+    here.  Returns g = dL/dh pre-output-layer: (G, H, W) f32."""
+    g_dim, h, w = dy.shape
+    cpw = channels_per_weight
+    chunk = h if chunk is None else chunk
+    assert h % chunk == 0, (h, chunk)
+    row_tile = row_tile or pick_row_tile(min(h, chunk))
+    chunk_tiles = chunk // row_tile
+
+    dy_f = jnp.flip(dy, axis=1)
+    wl_f = jnp.flip(wl, axis=1)
+    wc_f = jnp.flip(wc, axis=1)
+    wr_f = jnp.flip(wr, axis=1)
+
+    data_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi, ti, 0))
+    wt_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi // cpw, ti, 0))
+
+    g_f = pl.pallas_call(
+        functools.partial(_bwd_kernel, row_tile, chunk_tiles),
+        grid=(g_dim, h // row_tile),
+        in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
+        out_specs=data_spec,
+        out_shape=jax.ShapeDtypeStruct((g_dim, h, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((3, 1, w), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(dy_f, wl_f, wc_f, wr_f)
+    return jnp.flip(g_f, axis=1)

@@ -1,0 +1,158 @@
+"""Jit-friendly public ops for the GSPN-2 line scan.
+
+``gspn_scan`` is the single entry point used by ``repro.core.gspn``.  It is
+a ``custom_vjp`` primitive-like function with a hand-derived adjoint scan
+(DESIGN.md §2), selectable between:
+
+* ``impl="pallas"``  — the fused Pallas TPU kernel (``interpret=True`` on
+  CPU for validation; compiled Mosaic on real TPUs);
+* ``impl="xla"``     — a single ``lax.scan`` (the fused-scan analogue at the
+  XLA level; used for the multi-pod dry-run where Pallas cannot lower on
+  the CPU backend);
+* ``impl="per_step"``— the GSPN-1 emulation (benchmarks only; forward-only).
+* ``impl="auto"``    — pallas on TPU, xla elsewhere.
+
+Layout: ``x, lam: (G, H, W)``; ``wl, wc, wr: (G_w, H, W)`` with
+``G_w ∈ {G, G // channels_per_weight}`` (channel-shared compact mode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gspn_scan as _pk
+from repro.kernels import ref as _ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanConfig:
+    impl: str = "auto"
+    channels_per_weight: int = 1
+    row_tile: int | None = None
+    interpret: bool = True
+
+
+def _resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+def _fwd_dispatch(cfg: ScanConfig, x, wl, wc, wr, lam):
+    impl = _resolve_impl(cfg.impl)
+    if impl == "pallas":
+        return _pk.gspn_scan_fwd_pallas(
+            x, wl, wc, wr, lam,
+            channels_per_weight=cfg.channels_per_weight,
+            row_tile=cfg.row_tile, interpret=cfg.interpret)
+    if impl == "xla":
+        return _ref.gspn_scan_ref(x, wl, wc, wr, lam)
+    if impl == "per_step":
+        return _ref.gspn_scan_per_step(x, wl, wc, wr, lam)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def _bwd_adjoint_xla(dy, wl_b, wc_b, wr_b):
+    """Adjoint scan via lax.scan; weights pre-broadcast to full G. f32 out."""
+    zeros = jnp.zeros_like(dy[:, 0], dtype=jnp.float32)
+
+    def body(prods, row):
+        dy_r, wl_r, wc_r, wr_r = row
+        p_l, p_c, p_r = prods
+        g_r = (dy_r.astype(jnp.float32)
+               + _ref._shift_left(p_l) + p_c + _ref._shift_right(p_r))
+        wf = (wl_r.astype(jnp.float32), wc_r.astype(jnp.float32),
+              wr_r.astype(jnp.float32))
+        return (wf[0] * g_r, wf[1] * g_r, wf[2] * g_r), g_r
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (dy, wl_b, wc_b, wr_b))
+    _, gs = jax.lax.scan(body, (zeros, zeros, zeros), xs, reverse=True)
+    return jnp.moveaxis(gs, 0, 1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gspn_core(cfg: ScanConfig, x, wl, wc, wr, lam):
+    return _fwd_dispatch(cfg, x, wl, wc, wr, lam)
+
+
+def _gspn_core_fwd(cfg, x, wl, wc, wr, lam):
+    h = _fwd_dispatch(cfg, x, wl, wc, wr, lam)
+    return h, (x, wl, wc, wr, lam, h)
+
+
+def _gspn_core_bwd(cfg, res, dy):
+    x, wl, wc, wr, lam, h = res
+    g_dim = x.shape[0]
+    cpw = cfg.channels_per_weight
+    impl = _resolve_impl(cfg.impl)
+
+    if impl == "pallas":
+        g = _pk.gspn_scan_bwd_pallas(
+            dy, wl, wc, wr, channels_per_weight=cpw,
+            row_tile=cfg.row_tile, interpret=cfg.interpret)
+    else:
+        wl_b = _ref._broadcast_w(wl, g_dim)
+        wc_b = _ref._broadcast_w(wc, g_dim)
+        wr_b = _ref._broadcast_w(wr, g_dim)
+        g = _bwd_adjoint_xla(dy, wl_b, wc_b, wr_b)
+
+    g = g.astype(jnp.float32)
+    h32 = h.astype(jnp.float32)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h32[:, :1]), h32[:, :-1]], axis=1)
+    dx = (lam.astype(jnp.float32) * g).astype(x.dtype)
+    dlam = (x.astype(jnp.float32) * g).astype(lam.dtype)
+    dwl = g * _ref._shift_right(h_prev)
+    dwc = g * h_prev
+    dwr = g * _ref._shift_left(h_prev)
+    if cpw > 1:
+        gw = g_dim // cpw
+        shp = (gw, cpw) + dwl.shape[1:]
+        dwl = dwl.reshape(shp).sum(axis=1)
+        dwc = dwc.reshape(shp).sum(axis=1)
+        dwr = dwr.reshape(shp).sum(axis=1)
+    return (dx, dwl.astype(wl.dtype), dwc.astype(wc.dtype),
+            dwr.astype(wr.dtype), dlam)
+
+
+_gspn_core.defvjp(_gspn_core_fwd, _gspn_core_bwd)
+
+
+def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
+              impl: str = "auto", row_tile: int | None = None,
+              interpret: bool = True):
+    """GSPN line scan with optional GSPN-local chunking.
+
+    x, lam: (G, H, W); wl/wc/wr: (G_w, H, W), G_w divides G.
+    Returns h: (G, H, W) in x.dtype.  Differentiable in all tensor args.
+    """
+    g, h, w = x.shape
+    gw = wl.shape[0]
+    assert g % gw == 0, (g, gw)
+    cpw = g // gw
+
+    if chunk is not None and chunk != h:
+        assert h % chunk == 0, (h, chunk)
+        n = h // chunk
+        # Differentiable broadcast + fold; core then runs with cpw=1 so the
+        # chunk index can be absorbed into the leading grid dimension.
+        wl_b = _ref._broadcast_w(wl, g)
+        wc_b = _ref._broadcast_w(wc, g)
+        wr_b = _ref._broadcast_w(wr, g)
+
+        def fold(a):
+            return a.reshape(g * n, chunk, w)
+
+        cfg = ScanConfig(impl=impl, channels_per_weight=1,
+                         row_tile=row_tile, interpret=interpret)
+        out = _gspn_core(cfg, fold(x), fold(wl_b), fold(wc_b), fold(wr_b),
+                         fold(lam))
+        return out.reshape(g, h, w)
+
+    cfg = ScanConfig(impl=impl, channels_per_weight=cpw,
+                     row_tile=row_tile, interpret=interpret)
+    return _gspn_core(cfg, x, wl, wc, wr, lam)

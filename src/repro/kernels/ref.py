@@ -1,0 +1,223 @@
+"""Pure-jnp oracle for the GSPN line scan.
+
+Canonical semantics (top-to-bottom scan over axis -2, vectorised over the
+last axis W):
+
+    h[i, j] = wl[i,j] * h[i-1, j-1]
+            + wc[i,j] * h[i-1, j]
+            + wr[i,j] * h[i-1, j+1]
+            + lam[i,j] * x[i,j]
+
+with h[-1] = 0 and out-of-range neighbours contributing 0.  All arrays are
+laid out ``(G, H, W)`` where ``G`` flattens (batch, channel) — or
+(batch,) when the propagation weights are channel-shared, in which case the
+weight arrays carry ``G_w = G // channels_per_weight`` leading entries and
+are broadcast.
+
+Two reference implementations live here:
+
+* :func:`gspn_scan_ref` — a single ``jax.lax.scan`` over rows.  This is the
+  *algorithmic* fused-scan oracle used to validate the Pallas kernel.
+* :func:`gspn_scan_per_step` — the GSPN-1 emulation: one separately-compiled
+  XLA computation per row, hidden state round-tripping through host-visible
+  buffers between steps.  Used by the fig-3 benchmark ladder to reproduce
+  the paper's launch-bound baseline structurally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _shift_right(v: jnp.ndarray) -> jnp.ndarray:
+    """v[..., j] -> v[..., j-1]; position 0 becomes 0."""
+    pad = [(0, 0)] * (v.ndim - 1) + [(1, 0)]
+    return jnp.pad(v, pad)[..., :-1]
+
+
+def _shift_left(v: jnp.ndarray) -> jnp.ndarray:
+    """v[..., j] -> v[..., j+1]; last position becomes 0."""
+    pad = [(0, 0)] * (v.ndim - 1) + [(0, 1)]
+    return jnp.pad(v, pad)[..., 1:]
+
+
+def _broadcast_w(w: jnp.ndarray, g: int) -> jnp.ndarray:
+    """Broadcast channel-shared weights (G_w, H, W) to (G, H, W)."""
+    gw = w.shape[0]
+    if gw == g:
+        return w
+    assert g % gw == 0, f"G={g} not a multiple of G_w={gw}"
+    reps = g // gw
+    return jnp.broadcast_to(w[:, None], (gw, reps) + w.shape[1:]).reshape(
+        (g,) + w.shape[1:]
+    )
+
+
+def step_row(h_prev, x_row, wl_row, wc_row, wr_row, lam_row):
+    """One scan step: all inputs (..., W) for the current row."""
+    return (
+        wl_row * _shift_right(h_prev)
+        + wc_row * h_prev
+        + wr_row * _shift_left(h_prev)
+        + lam_row * x_row
+    )
+
+
+def gspn_scan_ref(x, wl, wc, wr, lam, h0=None, reverse: bool = False):
+    """Fused-scan oracle.  x, lam: (G, H, W); wl/wc/wr: (G_w, H, W).
+
+    Returns h: (G, H, W).  ``reverse=True`` scans bottom-to-top (this is a
+    *data* reversal, equivalent to flipping H before and after).
+    """
+    g = x.shape[0]
+    wl = _broadcast_w(wl, g)
+    wc = _broadcast_w(wc, g)
+    wr = _broadcast_w(wr, g)
+    if h0 is None:
+        h0 = jnp.zeros_like(x[:, 0])
+
+    def body(h_prev, row):
+        x_r, wl_r, wc_r, wr_r, lam_r = row
+        h = step_row(h_prev, x_r, wl_r, wc_r, wr_r, lam_r)
+        return h, h
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (x, wl, wc, wr, lam))
+    _, hs = jax.lax.scan(body, h0, xs, reverse=reverse)
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def gspn_scan_chunked_ref(x, wl, wc, wr, lam, chunk: int):
+    """GSPN-local: propagation confined to segments of ``chunk`` rows.
+
+    Equivalent to resetting the carry every ``chunk`` rows.
+    """
+    g, h, w = x.shape
+    assert h % chunk == 0, f"H={h} not divisible by chunk={chunk}"
+    n = h // chunk
+    # Broadcast shared weights to full G *before* folding: folding interleaves
+    # the chunk index into the leading dim, which would otherwise break the
+    # grouped-broadcast convention of gspn_scan_ref.
+    wl = _broadcast_w(wl, g)
+    wc = _broadcast_w(wc, g)
+    wr = _broadcast_w(wr, g)
+
+    def fold(a):
+        return a.reshape(a.shape[0] * n, chunk, w)
+
+    out = gspn_scan_ref(fold(x), fold(wl), fold(wc), fold(wr), fold(lam))
+    return out.reshape(g, h, w)
+
+
+# ---------------------------------------------------------------------------
+# GSPN-1 emulation: per-step "kernel launches".
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _one_step(h_prev, x_row, wl_row, wc_row, wr_row, lam_row):
+    return step_row(h_prev, x_row, wl_row, wc_row, wr_row, lam_row)
+
+
+def gspn_scan_per_step(x, wl, wc, wr, lam, block: bool = True):
+    """GSPN-1 structural emulation: one dispatch per row.
+
+    Each row is a separate jitted call whose result is materialised
+    (``block_until_ready``) before the next row is dispatched — mirroring
+    GSPN-1's per-step kernel launches and HBM round trips.  Numerically
+    identical to :func:`gspn_scan_ref`.
+    """
+    g = x.shape[0]
+    wl = _broadcast_w(wl, g)
+    wc = _broadcast_w(wc, g)
+    wr = _broadcast_w(wr, g)
+    h_prev = jnp.zeros_like(x[:, 0])
+    rows = []
+    for i in range(x.shape[1]):
+        h_prev = _one_step(h_prev, x[:, i], wl[:, i], wc[:, i], wr[:, i], lam[:, i])
+        if block:
+            h_prev.block_until_ready()
+        rows.append(h_prev)
+    return jnp.stack(rows, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Dense affinity-matrix oracle (Eq. 4 of the paper): O(H^2 W^2) — tiny
+# shapes only.  Validates that the scan equals y = G @ x with the
+# block-lower-triangular G built from tridiagonal w products.
+# ---------------------------------------------------------------------------
+
+def _tridiag(wl_row, wc_row, wr_row):
+    """Materialise the (W, W) tridiagonal matrix for one row."""
+    w = wc_row.shape[-1]
+    m = jnp.zeros((w, w), wc_row.dtype)
+    m = m + jnp.diag(wc_row)
+    m = m + jnp.diag(wl_row[1:], k=-1)   # h_new[k] += wl[k] * h_prev[k-1]
+    m = m + jnp.diag(wr_row[:-1], k=1)   # h_new[k] += wr[k] * h_prev[k+1]
+    return m
+
+
+def gspn_dense_oracle(x, wl, wc, wr, lam):
+    """Materialised Eq.-4 oracle for a single (H, W) slice per G entry."""
+    g_dim, h_dim, _ = x.shape
+    wl = _broadcast_w(wl, g_dim)
+    wc = _broadcast_w(wc, g_dim)
+    wr = _broadcast_w(wr, g_dim)
+    outs = []
+    for g in range(g_dim):
+        hs = []
+        h_prev = jnp.zeros_like(x[g, 0])
+        for i in range(h_dim):
+            m = _tridiag(wl[g, i], wc[g, i], wr[g, i])
+            h_prev = m @ h_prev + lam[g, i] * x[g, i]
+            hs.append(h_prev)
+        outs.append(jnp.stack(hs))
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# Reference VJP (used to validate the custom_vjp in ops.py).
+# ---------------------------------------------------------------------------
+
+def gspn_scan_ref_vjp(x, wl, wc, wr, lam, dy):
+    """Hand-derived backward pass, pure jnp.  Returns (dx, dwl, dwc, dwr, dlam).
+
+    Adjoint recurrence (g = dL/dh):
+        g[H-1] = dy[H-1]
+        g[i]   = dy[i] + W[i+1]^T g[i+1]
+        (W^T g)[m] = wl[m+1] g[m+1] + wc[m] g[m] + wr[m-1] g[m-1]
+    """
+    g_dim = x.shape[0]
+    gw_dim = wl.shape[0]
+    wl_b = _broadcast_w(wl, g_dim)
+    wc_b = _broadcast_w(wc, g_dim)
+    wr_b = _broadcast_w(wr, g_dim)
+
+    h = gspn_scan_ref(x, wl_b, wc_b, wr_b, lam)
+
+    def body(g_next_products, row):
+        dy_r, wl_r, wc_r, wr_r = row
+        pl_, pc_, pr_ = g_next_products
+        g_r = dy_r + _shift_left(pl_) + pc_ + _shift_right(pr_)
+        return (wl_r * g_r, wc_r * g_r, wr_r * g_r), g_r
+
+    zeros = jnp.zeros_like(x[:, 0])
+    xs = tuple(
+        jnp.moveaxis(a, 1, 0) for a in (dy, wl_b, wc_b, wr_b)
+    )
+    _, gs = jax.lax.scan(body, (zeros, zeros, zeros), xs, reverse=True)
+    g = jnp.moveaxis(gs, 0, 1)  # (G, H, W)
+
+    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    dx = lam * g
+    dlam = x * g
+    dwl = g * _shift_right(h_prev)
+    dwc = g * h_prev
+    dwr = g * _shift_left(h_prev)
+    if gw_dim != g_dim:
+        reps = g_dim // gw_dim
+        dwl = dwl.reshape((gw_dim, reps) + dwl.shape[1:]).sum(axis=1)
+        dwc = dwc.reshape((gw_dim, reps) + dwc.shape[1:]).sum(axis=1)
+        dwr = dwr.reshape((gw_dim, reps) + dwr.shape[1:]).sum(axis=1)
+    return dx, dwl, dwc, dwr, dlam

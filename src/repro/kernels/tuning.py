@@ -1,0 +1,52 @@
+"""VMEM-aware tile selection — the TPU analogue of the paper's §4.3
+occupancy balancing (block size vs shared-memory footprint vs resident
+blocks).
+
+The fused scan keeps per-grid-cell working set
+``(x + wl + wc + wr + lam + out) tiles + carry`` resident in VMEM.  The
+tuner picks the largest power-of-two row tile that (a) divides the scan
+length, (b) keeps the working set inside the VMEM budget, and (c) leaves
+headroom for double-buffered pipelining (factor 2 on the streamed
+operands — Pallas prefetches the next tile while the current one
+computes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# v5e-class VMEM per core; a conservative default budget leaves room for
+# the compiler's own buffers.
+VMEM_BYTES = 64 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    row_tile: int
+    working_set_bytes: int
+    n_grid_steps: int
+
+
+def scan_working_set(row_tile: int, w: int, dtype_bytes: int,
+                     n_streams: int = 6, double_buffer: bool = True) -> int:
+    """Bytes resident per grid cell: n_streams streamed tiles (+ their
+    prefetch copies) + the f32 carry row."""
+    tile = row_tile * w * dtype_bytes
+    mult = 2 if double_buffer else 1
+    return n_streams * tile * mult + w * 4
+
+
+def pick_row_tile(h: int, w: int, dtype_bytes: int = 4,
+                  vmem_budget: int = VMEM_BYTES, cap: int = 512,
+                  n_streams: int = 6) -> TileChoice:
+    """Largest power-of-two divisor of ``h`` whose working set fits."""
+    best = 1
+    t = 1
+    while t * 2 <= cap and h % (t * 2) == 0:
+        t *= 2
+        if scan_working_set(t, w, dtype_bytes, n_streams) <= vmem_budget:
+            best = t
+    return TileChoice(row_tile=best,
+                      working_set_bytes=scan_working_set(
+                          best, w, dtype_bytes, n_streams),
+                      n_grid_steps=h // best)

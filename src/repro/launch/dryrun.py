@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_BASE_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: AOT lower + compile every (architecture × input
+shape) cell on the production meshes, and record memory / cost /
+collective analyses for the roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k \
+        --mesh single --out results/dryrun
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+    python -m repro.launch.dryrun --list
+
+Driver mode (--all) runs each cell in a subprocess so one failing or
+OOM-ing compile cannot take down the sweep, and skips cells whose JSON
+already exists (incremental).
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def cell_matrix():
+    """All (arch, shape) cells incl. skips, plus vision extras."""
+    from repro.configs.all_archs import ASSIGNED, EXTRAS
+    from repro.configs.base import get_arch, SHAPES
+    from repro.launch.lowering import VISION_SHAPES
+    cells = []
+    for arch in ASSIGNED + EXTRAS:
+        entry = get_arch(arch)
+        for shape in SHAPES:
+            cells.append(("lm", arch, shape,
+                          entry.skip_shapes.get(shape)))
+    for vshape in VISION_SHAPES:
+        cells.append(("vision", "gspn2-b", vshape, None))
+    return cells
+
+
+def run_cell(kind: str, arch: str, shape: str, mesh_mode: str, out_dir: str,
+             remat: str | None = None, tag: str = "",
+             grad_accum: int | None = None):
+    import jax
+    from repro.launch.mesh import make_production_mesh, HW
+    from repro.roofline import hlo as hlo_mod
+
+    multi_pod = mesh_mode == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_mode,
+        "mesh_shape": dict(zip(mesh.axis_names,
+                               [int(s) for s in mesh.devices.shape])),
+        "n_devices": int(mesh.devices.size),
+        "tag": tag,
+        "status": "unknown",
+    }
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            if kind == "vision":
+                from repro.launch.lowering import build_vision_cell
+                cell = build_vision_cell(arch, shape, mesh)
+            else:
+                from repro.launch.lowering import build_lm_cell
+                cell = build_lm_cell(arch, shape, mesh, remat=remat,
+                                     grad_accum=grad_accum)
+            result["meta"] = cell.meta
+            jitted = jax.jit(cell.fn, **cell.jit_kwargs)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            print(mem)                       # proves it fits (or not)
+            cost = compiled.cost_analysis()
+            print({k: v for k, v in cost.items()
+                   if k in ("flops", "bytes accessed")})
+            mem_rec = {}
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes",
+                         "peak_memory_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    mem_rec[attr] = int(v)
+            hlo_text = compiled.as_text()
+            from repro.roofline import hlo_cost
+            cost_model = hlo_cost.analyze(hlo_text)
+            census = hlo_mod.op_census(hlo_text)
+
+            result.update({
+                "status": "ok",
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+                "memory": mem_rec,
+                # raw XLA numbers (while bodies counted once — see
+                # roofline/hlo_cost.py) kept for reference:
+                "cost_raw": {k: float(v) for k, v in cost.items()
+                             if isinstance(v, (int, float))},
+                # trip-corrected per-device cost model:
+                "flops": cost_model["flops"],
+                "bytes_hbm": cost_model["bytes"],
+                # fusion-aware bytes: XLA's own bytes-accessed (respects
+                # the compiled fusion structure) scaled by the trip ratio
+                # from the text model — the preferred memory-term input.
+                "bytes_hbm_calibrated": float(
+                    cost.get("bytes accessed", 0.0)
+                    * cost_model["trip_ratio"]),
+                "trip_ratio": cost_model["trip_ratio"],
+                "collectives": cost_model["collectives"],
+                "while_trips": cost_model["while_trips"],
+                "op_census": census,
+                "hlo_lines": hlo_text.count("\n"),
+                "hw": HW,
+            })
+    except Exception as exc:  # noqa: BLE001
+        result["status"] = "error"
+        result["error"] = f"{type(exc).__name__}: {exc}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape}__{mesh_mode}{('__' + tag) if tag else ''}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"[dryrun] {fname}: {result['status']} "
+          f"(lower {result.get('lower_s', '-')}s, "
+          f"compile {result.get('compile_s', '-')}s)")
+    return result["status"] == "ok"
+
+
+def write_skip(arch, shape, mesh_mode, reason, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape}__{mesh_mode}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump({"arch": arch, "shape": shape, "mesh": mesh_mode,
+                   "status": "skipped", "reason": reason}, f, indent=1)
+
+
+def drive_all(mesh_modes, out_dir, timeout: int = 1800):
+    ok = fail = skip = cached = 0
+    for kind, arch, shape, skip_reason in cell_matrix():
+        for mm in mesh_modes:
+            fname = os.path.join(out_dir, f"{arch}__{shape}__{mm}.json")
+            if os.path.exists(fname):
+                with open(fname) as f:
+                    prev = json.load(f)
+                if prev.get("status") in ("ok", "skipped"):
+                    cached += 1
+                    continue
+            if skip_reason is not None:
+                write_skip(arch, shape, mm, skip_reason, out_dir)
+                skip += 1
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mm,
+                   "--out", out_dir]
+            if kind == "vision":
+                cmd.append("--vision")
+            print(f"[driver] {arch} × {shape} × {mm} ...", flush=True)
+            try:
+                r = subprocess.run(cmd, timeout=timeout)
+                ok += int(r.returncode == 0)
+                fail += int(r.returncode != 0)
+            except subprocess.TimeoutExpired:
+                write_skip(arch, shape, mm, f"compile timeout {timeout}s",
+                           out_dir)
+                fail += 1
+    print(f"[driver] done: ok={ok} fail={fail} skipped={skip} "
+          f"cached={cached}")
+    return fail == 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--vision", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    if args.list:
+        for kind, arch, shape, skip in cell_matrix():
+            print(f"{kind:7s} {arch:20s} {shape:15s}"
+                  f"{' SKIP: ' + skip if skip else ''}")
+        return
+
+    modes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        sys.exit(0 if drive_all(modes, args.out, args.timeout) else 1)
+
+    ok = True
+    for mm in modes:
+        ok &= run_cell("vision" if args.vision else "lm", args.arch,
+                       args.shape, mm, args.out, remat=args.remat,
+                       tag=args.tag, grad_accum=args.grad_accum)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

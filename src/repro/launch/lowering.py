@@ -1,0 +1,242 @@
+"""Cell builders for the multi-pod dry-run: one (architecture × input
+shape × mesh) combination → a jitted function + abstract args + shardings,
+ready for ``.lower().compile()``.
+
+Covers the three shape kinds (train / prefill / decode) for all LM
+architectures plus the paper's own GSPN-2 vision backbone (extra cells).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_arch, input_specs, SHAPES, ShapeSpec
+from repro.launch.mesh import dp_axes_for
+from repro.models import lm as lm_mod
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.parallel import sharding as shd
+from repro.train.step import build_train_step
+
+# Archs whose params+Adam state exceed HBM in f32: store bf16 (DESIGN §5).
+BF16_PARAM_ARCHS = {"kimi-k2-1t-a32b", "grok-1-314b", "qwen2-vl-72b"}
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Any
+    args: tuple
+    jit_kwargs: dict
+    meta: dict
+
+
+def _count(tree) -> int:
+    import numpy as np
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def build_lm_cell(arch: str, shape_name: str, mesh, *,
+                  remat: str | None = None, grad_accum: int | None = None,
+                  extra_overrides: dict | None = None) -> Cell:
+    entry = get_arch(arch)
+    shape = SHAPES[shape_name]
+    tp = mesh.shape["model"]
+    dp_axes = dp_axes_for(mesh)
+    cfg = entry.full(n_model_shards=tp)
+    overrides = {"max_seq": shape.seq_len}
+    if arch in BF16_PARAM_ARCHS:
+        overrides["param_dtype"] = jnp.bfloat16
+    if remat is not None:
+        overrides["remat"] = remat
+    if extra_overrides:
+        overrides.update(extra_overrides)
+    cfg = dataclasses.replace(cfg, **overrides)
+    ctx = lm_mod.Ctx(mesh=mesh, dp_axes=dp_axes)
+
+    abstract_params = jax.eval_shape(
+        lambda k: lm_mod.init_lm(k, cfg), jax.random.PRNGKey(0))
+    pshard = shd.param_shardings(abstract_params, mesh)
+    n_params = _count(abstract_params)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "n_params": n_params, "family": cfg.family,
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch}
+
+    if shape.kind == "train":
+        ocfg = AdamWConfig(
+            state_dtype=jnp.bfloat16 if n_params > 5e10 else jnp.float32)
+        abstract_state = jax.eval_shape(
+            lambda p: {"params": p, "opt": adamw_init(ocfg, p)},
+            abstract_params)
+        state_shardings = {"params": pshard,
+                           "opt": {"m": pshard, "v": pshard,
+                                   "step": NamedSharding(mesh, P())}}
+        batch = input_specs(cfg, shape)
+        bshard = shd.batch_shardings(batch, mesh, dp_axes)
+        # Microbatch so per-microbatch activation stacks fit HBM:
+        # target ≤ ~25M token·feature elements per device per microbatch.
+        dp = 1
+        for a in dp_axes:
+            dp *= mesh.shape[a]
+        b_loc = max(shape.global_batch // dp, 1)
+        tokens_feat = b_loc * shape.seq_len * cfg.d_model
+        if grad_accum is None:
+            grad_accum = 1
+            # MoE: FSDP weight-gather traffic scales with K — cap at 8
+            # (measured: kimi K=16→8 cuts collectives 19→10.8 TB/dev for
+            # +9% temp; EXPERIMENTS.md §Perf).
+            k_cap = 8 if cfg.n_experts else b_loc
+            while (tokens_feat // grad_accum > 25e6
+                   and grad_accum < min(b_loc, k_cap)
+                   and b_loc % (grad_accum * 2) == 0):
+                grad_accum *= 2
+        meta["grad_accum"] = grad_accum
+        fn = build_train_step(cfg, ocfg, mesh=mesh, dp_axes=dp_axes,
+                              grad_accum=grad_accum)
+        return Cell(
+            name=f"{arch}__{shape_name}",
+            fn=fn, args=(abstract_state, batch),
+            jit_kwargs=dict(in_shardings=(state_shardings, bshard),
+                            out_shardings=(state_shardings, None),
+                            donate_argnums=(0,)),
+            meta=meta)
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        bshard = shd.batch_shardings(batch, mesh, dp_axes)
+
+        def prefill_fn(params, batch):
+            logits, caches, _ = lm_mod.lm_prefill(
+                params, cfg, batch["tokens"], max_len=shape.seq_len, ctx=ctx,
+                enc_frames=batch.get("enc_frames"),
+                vision_embeds=batch.get("vision_embeds"))
+            return logits, caches
+
+        abstract_caches = jax.eval_shape(
+            lambda: lm_mod.init_lm_cache(cfg, shape.global_batch,
+                                         shape.seq_len))
+        cshard = shd.cache_shardings(abstract_caches, mesh, dp_axes)
+        return Cell(
+            name=f"{arch}__{shape_name}",
+            fn=prefill_fn, args=(abstract_params, batch),
+            jit_kwargs=dict(in_shardings=(pshard, bshard),
+                            out_shardings=(None, cshard)),
+            meta=meta)
+
+    # decode
+    b = shape.global_batch
+    abstract_caches = jax.eval_shape(
+        lambda: lm_mod.init_lm_cache(cfg, b, shape.seq_len))
+    # decode starts from a filled cache: set plausible lengths in meta only
+    cshard = shd.cache_shardings(abstract_caches, mesh, dp_axes)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tshard = shd.batch_shardings({"token": token}, mesh, dp_axes)["token"]
+
+    if cfg.family == "audio":
+        acfg = lm_mod._attn_cfg(cfg)
+        enc_kv = (jax.ShapeDtypeStruct(
+                      (b, cfg.enc_len, cfg.n_kv_heads, acfg.hd),
+                      cfg.compute_dtype),) * 2
+        ekv_shard = jax.tree.map(
+            lambda l: NamedSharding(mesh, shd.sanitize_spec(
+                P(dp_axes), l.shape, mesh)), enc_kv)
+
+        def decode_fn(params, token, caches, enc_kv):
+            return lm_mod.lm_decode_step(params, cfg, token, caches,
+                                         ctx=ctx, enc_kv=enc_kv)
+
+        return Cell(
+            name=f"{arch}__{shape_name}",
+            fn=decode_fn, args=(abstract_params, token, abstract_caches,
+                                enc_kv),
+            jit_kwargs=dict(
+                in_shardings=(pshard, tshard, cshard, ekv_shard),
+                out_shardings=(None, cshard), donate_argnums=(2,)),
+            meta=meta)
+
+    def decode_fn(params, token, caches):
+        return lm_mod.lm_decode_step(params, cfg, token, caches, ctx=ctx)
+
+    return Cell(
+        name=f"{arch}__{shape_name}",
+        fn=decode_fn, args=(abstract_params, token, abstract_caches),
+        jit_kwargs=dict(in_shardings=(pshard, tshard, cshard),
+                        out_shardings=(None, cshard), donate_argnums=(2,)),
+        meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Vision cells (the paper's own architecture — extra beyond the 40).
+# ---------------------------------------------------------------------------
+
+VISION_SHAPES = {
+    "img_train_224": ShapeSpec("img_train_224", "train", 224, 1024),
+    "img_infer_1024": ShapeSpec("img_infer_1024", "prefill", 1024, 16),
+}
+
+
+def build_vision_cell(arch: str, shape_name: str, mesh) -> Cell:
+    from repro.configs.gspn2_vision import VISION_CONFIGS
+    from repro.models import vision as vis_mod
+    import dataclasses as dc
+
+    vcfg = dc.replace(VISION_CONFIGS[arch],
+                      img_size=VISION_SHAPES[shape_name].seq_len,
+                      impl="xla")
+    shape = VISION_SHAPES[shape_name]
+    dp_axes = dp_axes_for(mesh)
+    ctx = lm_mod.Ctx(mesh=mesh, dp_axes=dp_axes)
+    b = shape.global_batch
+
+    abstract_params = jax.eval_shape(
+        lambda k: vis_mod.init_vision(k, vcfg), jax.random.PRNGKey(0))
+    pshard = shd.param_shardings(abstract_params, mesh)
+    images = jax.ShapeDtypeStruct((b, vcfg.img_size, vcfg.img_size, 3),
+                                  jnp.float32)
+    labels = jax.ShapeDtypeStruct((b,), jnp.int32)
+    bshard = shd.batch_shardings({"images": images, "labels": labels},
+                                 mesh, dp_axes)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "n_params": _count(abstract_params), "family": "vision",
+            "seq_len": vcfg.img_size, "global_batch": b}
+
+    if shape.kind == "train":
+        ocfg = AdamWConfig()
+        abstract_state = jax.eval_shape(
+            lambda p: {"params": p, "opt": adamw_init(ocfg, p)},
+            abstract_params)
+        state_shardings = {"params": pshard,
+                           "opt": {"m": pshard, "v": pshard,
+                                   "step": NamedSharding(mesh, P())}}
+
+        from repro.optim.adamw import adamw_update
+
+        def train_fn(state, batch):
+            def loss_fn(p):
+                return vis_mod.vision_loss(p, vcfg, batch, ctx=ctx)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"])
+            new_p, new_o, stats = adamw_update(ocfg, grads, state["opt"],
+                                               state["params"])
+            return {"params": new_p, "opt": new_o}, {"loss": loss, **stats}
+
+        return Cell(
+            name=f"{arch}__{shape_name}", fn=train_fn,
+            args=(abstract_state, {"images": images, "labels": labels}),
+            jit_kwargs=dict(in_shardings=(state_shardings, bshard),
+                            out_shardings=(state_shardings, None),
+                            donate_argnums=(0,)),
+            meta=meta)
+
+    def infer_fn(params, batch):
+        return vis_mod.apply_vision(params, batch["images"], vcfg, ctx=ctx)
+
+    return Cell(
+        name=f"{arch}__{shape_name}", fn=infer_fn,
+        args=(abstract_params, {"images": images, "labels": labels}),
+        jit_kwargs=dict(in_shardings=(pshard, bshard), out_shardings=None),
+        meta=meta)

@@ -1,0 +1,47 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required for the smoke tests to keep seeing one
+CPU device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axes: ("pod", "data", "model") multi-pod / ("data", "model") single-pod.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for_devices(devices, *, model_parallel: int = 16):
+    """Elastic helper: best (data, model) mesh for an arbitrary device set."""
+    n = len(devices)
+    tp = model_parallel
+    while n % tp != 0:
+        tp //= 2
+    return jax.make_mesh(
+        (n // tp, tp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        devices=devices)
+
+
+def dp_axes_for(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+HW = {
+    # TPU v5e-class chip constants used for the roofline terms.
+    "peak_flops_bf16": 197e12,     # FLOP/s per chip
+    "hbm_bw": 819e9,               # B/s per chip
+    "ici_bw": 50e9,                # B/s per link
+    "hbm_bytes": 16e9,             # HBM capacity per chip
+}

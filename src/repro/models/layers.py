@@ -1,0 +1,269 @@
+"""Common neural-net layers (functional, pure JAX).
+
+Every layer follows the convention ``init_*(key, ...) -> params`` and a
+matching ``apply`` function.  Params are plain pytrees of ``jnp.ndarray``;
+logical sharding axes for each leaf are produced by the twin ``*_spec``
+functions in :mod:`repro.parallel.sharding` (kept structurally in sync via
+tests).
+
+Mixed precision: parameters are stored in ``param_dtype`` (default f32) and
+cast to ``compute_dtype`` (default bf16) at use; layernorm/softmax/losses
+run in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+    def cast(self, p):
+        return jax.tree.map(lambda a: a.astype(self.compute_dtype), p)
+
+
+DEFAULT_POLICY = DTypePolicy()
+
+
+# ---------------------------------------------------------------------------
+# Initialisers.
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out),
+                                        jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, vocab, dim, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim),
+                                        jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_core(x, scale, eps):
+    ms = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32) / x.shape[-1]
+    inv = jax.lax.rsqrt(ms + eps)[..., None].astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    ms = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32) / x.shape[-1]
+    inv = jax.lax.rsqrt(ms + eps)
+    y = x * inv[..., None].astype(x.dtype) * scale.astype(x.dtype)
+    return y, (x, scale, inv)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    # All cotangent math stays in x.dtype (f32 only for the row-reductions)
+    # — a plain-autodiff rmsnorm contracts f32 cotangents against x, which
+    # XLA hoists into an f32 copy of the whole per-layer residual stack
+    # (+7–11 GB/device at 4k×256 scale).
+    x, scale, inv = res
+    d = x.shape[-1]
+    sc = scale.astype(x.dtype)
+    inv_c = inv[..., None].astype(x.dtype)
+    gs = g * sc                                           # (..., d)
+    dot = jnp.einsum("...d,...d->...", gs, x,
+                     preferred_element_type=jnp.float32)
+    coef = (dot * (inv ** 3) / d)[..., None].astype(x.dtype)
+    dx = gs * inv_c - x * coef
+    dscale = jnp.einsum("...d->d" if x.ndim == 2 else "...d->d",
+                        (g * x * inv_c).astype(jnp.float32))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+_rmsnorm_core.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def apply_rmsnorm(params, x, eps: float = 1e-6):
+    return _rmsnorm_core(x, params["scale"], eps)
+
+
+def init_layernorm(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def apply_layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, dim, hidden, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, dim, hidden, dtype),
+        "up": dense_init(k2, dim, hidden, dtype),
+        "down": dense_init(k3, hidden, dim, dtype),
+    }
+
+
+def apply_swiglu(params, x, policy: DTypePolicy = DEFAULT_POLICY):
+    p = policy.cast(params)
+    xc = x.astype(policy.compute_dtype)
+    h = jax.nn.silu(xc @ p["gate"]) * (xc @ p["up"])
+    return (h @ p["down"]).astype(x.dtype)
+
+
+def init_gelu_mlp(key, dim, hidden, dtype=jnp.float32, bias: bool = True):
+    k1, k2 = jax.random.split(key)
+    p = {"fc1": dense_init(k1, dim, hidden, dtype),
+         "fc2": dense_init(k2, hidden, dim, dtype)}
+    if bias:
+        p["b1"] = jnp.zeros((hidden,), dtype)
+        p["b2"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_gelu_mlp(params, x, policy: DTypePolicy = DEFAULT_POLICY):
+    p = policy.cast(params)
+    xc = x.astype(policy.compute_dtype)
+    h = xc @ p["fc1"]
+    if "b1" in p:
+        h = h + p["b1"]
+    h = jax.nn.gelu(h)
+    y = h @ p["fc2"]
+    if "b2" in p:
+        y = y + p["b2"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and M-RoPE).
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, sections=(16, 24, 24), theta: float = 10000.0):
+    """Qwen2-VL multimodal rotary embedding.
+
+    x: (B, S, H, D); positions_3d: (3, B, S) — temporal/height/width ids.
+    ``sections`` give the number of D/2 frequency slots per axis and must
+    sum to D/2.  For pure-text streams all three id planes are equal and
+    M-RoPE reduces exactly to RoPE.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    # Select which positional plane drives each frequency slot.
+    plane = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                       total_repeat_length=d // 2)     # (D/2,)
+    # positions per frequency slot: gather the driving plane -> (D/2, B, S)
+    pos_sel = positions_3d.astype(jnp.float32)[plane]
+    ang = jnp.moveaxis(pos_sel, 0, -1) * freqs         # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses / heads.
+# ---------------------------------------------------------------------------
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Token-level CE, partition-friendly for vocab-sharded logits.
+
+    ``take_along_axis`` over a sharded vocab dim forces SPMD to replicate
+    the f32 logits (~40 GB/device on the 4k×256 train cell); the one-hot
+    einsum below keeps every op a plain sharded reduction instead.
+    """
+    v = logits.shape[-1]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    ex = jnp.exp(logits.astype(jnp.float32) - m.astype(jnp.float32))
+    lse = m.astype(jnp.float32)[..., 0] + jnp.log(jnp.sum(ex, axis=-1))
+    onehot = jax.nn.one_hot(labels, v, dtype=logits.dtype)
+    ll = jnp.einsum("...v,...v->...", logits.astype(jnp.float32),
+                    onehot.astype(jnp.float32))
+    nll = lse - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise conv (LPU for GSPN blocks; causal conv1d for Mamba).
+# ---------------------------------------------------------------------------
+
+def init_dwconv2d(key, dim, k: int = 3, dtype=jnp.float32):
+    w = jax.random.normal(key, (k, k, 1, dim), jnp.float32) * (1.0 / k)
+    return {"w": w.astype(dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def apply_dwconv2d(params, x):
+    """x: (B, H, W, C) depthwise 'same' conv."""
+    w = params["w"].astype(jnp.float32)
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w,
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1])
+    return (y + params["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_causal_conv1d(key, dim, k: int = 4, dtype=jnp.float32):
+    w = jax.random.normal(key, (k, 1, dim), jnp.float32) * (1.0 / math.sqrt(k))
+    return {"w": w.astype(dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def apply_causal_conv1d(params, x, state: Optional[jnp.ndarray] = None):
+    """x: (B, S, C).  Causal depthwise conv.  If ``state`` (B, k-1, C) is
+    given, runs in streaming mode and returns (y, new_state)."""
+    w = params["w"].astype(jnp.float32)          # (k, 1, C)
+    k = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if state is not None:
+        xa = jnp.concatenate([state.astype(jnp.float32), xf], axis=1)
+        new_state = xa[:, -(k - 1):] if k > 1 else jnp.zeros_like(state)
+    else:
+        xa = jnp.pad(xf, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = None
+    y = jax.lax.conv_general_dilated(
+        xa, w, window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    y = (y + params["b"].astype(jnp.float32)).astype(x.dtype)
+    return (y, new_state) if state is not None else (y, None)

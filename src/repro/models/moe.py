@@ -1,0 +1,251 @@
+"""Mixture-of-Experts layer with expert-parallel shard_map dispatch.
+
+Design (DESIGN.md §5):
+
+* Expert weights are stored as **per-shard slabs** ``(M, E_loc, D, F_loc)``
+  where ``M`` is the model-axis size, ``ep = min(E, M)`` expert groups are
+  sharded across the axis and ``tp = M // ep`` shards split each expert's
+  hidden dim (Grok-1: E=8 on a 16-way axis ⇒ ep=8, tp=2).  The slab layout
+  makes the sharding a plain ``P('model', ...)`` regardless of E vs M.
+* Inside ``shard_map`` every shard routes its (data-parallel-local) tokens
+  with the replicated router, keeps the slots owned by its expert group,
+  scatters them into an ``(E_loc, C, D)`` capacity buffer (`.at[].add` with
+  ``mode='drop'`` — dropped tokens fall off the end, Switch-style), runs the
+  expert SwiGLU, gathers back per slot and applies the gate; a single
+  ``psum`` over the model axis assembles the full output (it simultaneously
+  sums the ``tp`` hidden-dim partials and selects the owner shard's value).
+* Token order is never globally sorted — ranking within an expert uses a
+  local argsort, so dispatch is deterministic.
+
+Runs unchanged on a single device (M=1, psum over nothing) for smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import DTypePolicy, DEFAULT_POLICY, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    dim: int
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden
+    n_shards: int = 1              # model-axis size M (static)
+    capacity_factor: float = 1.25
+    shared_expert_ff: int = 0      # 0 = no shared expert
+    renorm_gates: bool = True      # re-normalise top-k gate values
+    aux_loss_coef: float = 0.01
+
+    @property
+    def ep(self) -> int:
+        return min(self.n_experts, self.n_shards)
+
+    @property
+    def tp(self) -> int:
+        assert self.n_shards % self.ep == 0, (self.n_shards, self.n_experts)
+        return self.n_shards // self.ep
+
+    @property
+    def e_loc(self) -> int:
+        assert self.n_experts % self.ep == 0
+        return self.n_experts // self.ep
+
+    @property
+    def f_loc(self) -> int:
+        assert self.d_ff % self.tp == 0
+        return self.d_ff // self.tp
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.float32):
+    m, el, fl, d = cfg.n_shards, cfg.e_loc, cfg.f_loc, cfg.dim
+    ks = jax.random.split(key, 5)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(cfg.d_ff)
+
+    def slab(k, shape, scale):
+        return (jax.random.truncated_normal(k, -2.0, 2.0, shape, jnp.float32)
+                * scale).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d, cfg.n_experts, jnp.float32),
+        "gate_slab": slab(ks[1], (m, el, d, fl), scale_in),
+        "up_slab": slab(ks[2], (m, el, d, fl), scale_in),
+        "down_slab": slab(ks[3], (m, el, fl, d), scale_out),
+    }
+    if cfg.shared_expert_ff:
+        from repro.models.layers import init_swiglu
+        p["shared"] = init_swiglu(ks[4], d, cfg.shared_expert_ff, dtype)
+    return p
+
+
+@jax.custom_vjp
+def _router_matmul(x2d, w):
+    return jnp.einsum("td,de->te", x2d, w.astype(x2d.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def _router_matmul_fwd(x2d, w):
+    return _router_matmul(x2d, w), (x2d, w)
+
+
+def _router_matmul_bwd(res, dlogits):
+    # Keep cotangents in the compute dtype: the default f32 dlogits would
+    # contract against x in f32, and XLA hoists that into an f32 copy of
+    # the whole per-layer x residual stack (7 GB/device, kimi train_4k).
+    x2d, w = res
+    dl = dlogits.astype(x2d.dtype)
+    dx = dl @ w.astype(x2d.dtype).T
+    dw = (x2d.T @ dl).astype(w.dtype)
+    return dx, dw
+
+
+_router_matmul.defvjp(_router_matmul_fwd, _router_matmul_bwd)
+
+
+def _route(x2d, router_w, cfg: MoEConfig):
+    """Router with f32 ACCUMULATION (no materialised f32 copy of x).
+    x2d (T, D) -> gates (T, k), experts (T, k) int32, plus aux loss."""
+    logits = _router_matmul(x2d, router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_v, top_i = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.renorm_gates:
+        top_v = top_v / jnp.maximum(top_v.sum(-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum(frac_tokens * frac_probs)
+    t = x2d.shape[0]
+    onehot_top1 = jax.nn.one_hot(top_i[:, 0], cfg.n_experts, dtype=jnp.float32)
+    frac_tokens = onehot_top1.mean(axis=0)
+    frac_probs = probs.mean(axis=0)
+    aux = cfg.n_experts * jnp.sum(frac_tokens * frac_probs)
+    del t
+    return top_v, top_i, aux
+
+
+def _moe_shard_body(x, router_w, gate_slab, up_slab, down_slab,
+                    cfg: MoEConfig, shard_idx, policy: DTypePolicy):
+    """Per-shard MoE compute.  x: (T, D) dp-local tokens (replicated across
+    the model axis); slabs: (E_loc, D, F_loc) etc (this shard's).
+    Returns PARTIAL output (T, D) — caller psums over the model axis —
+    and the aux loss (identical on every shard)."""
+    t, d = x.shape
+    k = cfg.top_k
+    e_loc, c_dim = cfg.e_loc, None
+    cap = int(math.ceil(k * t / cfg.n_experts * cfg.capacity_factor))
+    cap = max(cap, 1)
+    c_dim = cap
+
+    gates, experts, aux = _route(x, router_w, cfg)      # (T,k)
+
+    # Rank of each (token, slot) within its expert, computed locally and
+    # identically on every shard (inputs are model-replicated).
+    eflat = experts.reshape(t * k)
+    order = jnp.argsort(eflat, stable=True)
+    sorted_e = eflat[order]
+    counts = jnp.bincount(eflat, length=cfg.n_experts)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+
+    group = shard_idx // cfg.tp                          # expert group id
+    e_lo = group * e_loc
+    owned = (eflat >= e_lo) & (eflat < e_lo + e_loc)
+    kept = owned & (rank < cap)
+    e_local = jnp.where(kept, eflat - e_lo, e_loc)       # OOB => dropped
+    r_local = jnp.where(kept, rank, cap)
+
+    xc = x.astype(policy.compute_dtype)
+    tok_of_slot = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    buffer = jnp.zeros((e_loc, cap, d), policy.compute_dtype)
+    buffer = buffer.at[e_local, r_local].add(
+        xc[tok_of_slot], mode="drop")
+
+    gs = gate_slab.astype(policy.compute_dtype)
+    us = up_slab.astype(policy.compute_dtype)
+    ds = down_slab.astype(policy.compute_dtype)
+    h = jnp.einsum("ecd,edf->ecf", buffer, gs)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buffer, us)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, ds)          # partial over F
+
+    y_slots = out_buf.at[e_local, r_local].get(
+        mode="fill", fill_value=0)                       # (T*k, D)
+    y_slots = y_slots * gates.reshape(t * k, 1).astype(policy.compute_dtype)
+    y = y_slots.reshape(t, k, d).sum(axis=1)
+    return y, aux
+
+
+def apply_moe(params, x, cfg: MoEConfig, *, mesh=None,
+              dp_axes=("data",), model_axis="model",
+              policy: DTypePolicy = DEFAULT_POLICY):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    With a mesh: runs as shard_map (manual) over all mesh axes; tokens stay
+    dp-local, experts are model-sharded per the slab layout.  Without a
+    mesh: single-shard local execution.
+    """
+    b, s, d = x.shape
+
+    def flat_body(x3d, router_w, gslab, uslab, dslab, shard_idx):
+        x2d = x3d.reshape(-1, d)
+        y, aux = _moe_shard_body(x2d, router_w, gslab, uslab, dslab,
+                                 cfg, shard_idx, policy)
+        y = y.reshape(x3d.shape).astype(x3d.dtype)
+        return y, aux
+
+    if mesh is None or cfg.n_shards == 1:
+        y, aux = flat_body(x, params["router"],
+                           params["gate_slab"][0], params["up_slab"][0],
+                           params["down_slab"][0], 0)
+    else:
+        def mapped(x3d, router_w, gslab, uslab, dslab):
+            idx = jax.lax.axis_index(model_axis)
+            y, aux = flat_body(x3d, router_w, gslab[0], uslab[0], dslab[0],
+                               idx)
+            y = jax.lax.psum(y, model_axis)
+            aux = jax.lax.pmean(aux, model_axis)
+            return y, aux
+
+        dp = P(dp_axes)
+        y, aux = jax.shard_map(
+            mapped, mesh=mesh,
+            in_specs=(P(dp_axes[0] if len(dp_axes) == 1 else dp_axes,
+                        None, None),
+                      P(None, None),
+                      P(model_axis, None, None, None),
+                      P(model_axis, None, None, None),
+                      P(model_axis, None, None, None)),
+            out_specs=(P(dp_axes[0] if len(dp_axes) == 1 else dp_axes,
+                         None, None), P()),
+            check_vma=False,
+        )(x, params["router"], params["gate_slab"], params["up_slab"],
+          params["down_slab"])
+        del dp
+
+    if cfg.shared_expert_ff:
+        from repro.models.layers import apply_swiglu
+        y = y + apply_swiglu(params["shared"], x, policy)
+    return y, aux * cfg.aux_loss_coef
+
+
+def moe_param_count(cfg: MoEConfig) -> int:
+    n = cfg.dim * cfg.n_experts                       # router
+    n += 3 * cfg.n_experts * cfg.dim * cfg.d_ff       # experts
+    if cfg.shared_expert_ff:
+        n += 3 * cfg.dim * cfg.shared_expert_ff
+    return n
+
+
+def moe_active_param_count(cfg: MoEConfig) -> int:
+    n = cfg.dim * cfg.n_experts
+    n += 3 * cfg.top_k * cfg.dim * cfg.d_ff
+    if cfg.shared_expert_ff:
+        n += 3 * cfg.dim * cfg.shared_expert_ff
+    return n

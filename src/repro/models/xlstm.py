@@ -1,0 +1,210 @@
+"""xLSTM token mixers: mLSTM (matrix memory, chunk-parallel) and sLSTM
+(scalar memory, strictly sequential scan).
+
+mLSTM is evaluated through the shared :func:`repro.models.ssm.chunked_gla`
+core — matrix memory with per-step scalar forget decay is exactly a gated
+linear recurrence.  The normaliser state n_t is carried by augmenting the
+value vectors with a ones column.
+
+Deviation from the paper (recorded in DESIGN.md §7): we use sigmoid input
+gates instead of exponential gates with the running max-stabiliser in the
+*chunked* mLSTM path (the stabilised exponential form is not chunk-local);
+sLSTM keeps the exact exponential gating + stabiliser since it is evaluated
+step-by-step anyway.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (DTypePolicy, DEFAULT_POLICY, dense_init,
+                                 init_rmsnorm, apply_rmsnorm)
+from repro.models.ssm import chunked_gla, gla_decode_step
+
+
+# ---------------------------------------------------------------------------
+# mLSTM.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    dim: int
+    n_heads: int = 4
+    expand: int = 2
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.dim
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def init_mlstm(key, cfg: MLSTMConfig, dtype=jnp.float32):
+    di, nh = cfg.d_inner, cfg.n_heads
+    ks = jax.random.split(key, 3)
+    # in_proj packs q, k, v (d_inner each), o-gate (d_inner), f & i gates (nh each)
+    return {
+        "in_proj": dense_init(ks[0], cfg.dim, 4 * di + 2 * nh, dtype),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": dense_init(ks[1], di, cfg.dim, dtype),
+    }
+
+
+def _mlstm_project(params, x, cfg: MLSTMConfig, policy):
+    b, s, _ = x.shape
+    di, nh, hd = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    p = policy.cast(params)
+    proj = (x.astype(policy.compute_dtype) @ p["in_proj"]).astype(jnp.float32)
+    q, k, v, o, fg, ig = jnp.split(
+        proj, [di, 2 * di, 3 * di, 4 * di, 4 * di + nh], axis=-1)
+    q = q.reshape(b, s, nh, hd) / math.sqrt(hd)
+    k = k.reshape(b, s, nh, hd)
+    v = v.reshape(b, s, nh, hd)
+    log_decay = jax.nn.log_sigmoid(fg)                     # (B,S,H)
+    k = k * jax.nn.sigmoid(ig)[..., None]                  # input gate
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v_aug = jnp.concatenate([v, ones], axis=-1)
+    return q, k, v_aug, o, log_decay
+
+
+def _mlstm_output(params, y_aug, o, x, cfg: MLSTMConfig, policy):
+    b, s = x.shape[:2]
+    di, hd = cfg.d_inner, cfg.head_dim
+    y = y_aug[..., :hd]
+    n = y_aug[..., hd:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.reshape(b, s, di)
+    y = apply_rmsnorm(params["norm"], y) * jax.nn.sigmoid(o)
+    p = policy.cast(params)
+    return (y.astype(policy.compute_dtype) @ p["out_proj"]).astype(x.dtype)
+
+
+def apply_mlstm(params, x, cfg: MLSTMConfig,
+                policy: DTypePolicy = DEFAULT_POLICY):
+    q, k, v_aug, o, log_decay = _mlstm_project(params, x, cfg, policy)
+    y_aug, _ = chunked_gla(q, k, v_aug, log_decay, chunk=cfg.chunk)
+    return _mlstm_output(params, y_aug, o, x, cfg, policy)
+
+
+def apply_mlstm_prefill(params, x, cfg: MLSTMConfig,
+                        policy: DTypePolicy = DEFAULT_POLICY):
+    q, k, v_aug, o, log_decay = _mlstm_project(params, x, cfg, policy)
+    y_aug, final_state = chunked_gla(q, k, v_aug, log_decay, chunk=cfg.chunk)
+    return _mlstm_output(params, y_aug, o, x, cfg, policy), \
+        {"state": final_state}
+
+
+def apply_mlstm_decode(params, x, cfg: MLSTMConfig, cache,
+                       policy: DTypePolicy = DEFAULT_POLICY):
+    """x (B,1,D); cache {'state': (B,H,Dk,Dv+1)}."""
+    q, k, v_aug, o, log_decay = _mlstm_project(params, x, cfg, policy)
+    y, new_state = gla_decode_step(cache["state"], q[:, 0], k[:, 0],
+                                   v_aug[:, 0], log_decay[:, 0])
+    out = _mlstm_output(params, y[:, None], o, x, cfg, policy)
+    return out, {"state": new_state}
+
+
+def init_mlstm_cache(batch, cfg: MLSTMConfig):
+    return {"state": jnp.zeros(
+        (batch, cfg.n_heads, cfg.head_dim, cfg.head_dim + 1), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (exact exponential gating with stabiliser).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    dim: int
+    n_heads: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+
+def init_slstm(key, cfg: SLSTMConfig, dtype=jnp.float32):
+    nh, hd = cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 3)
+    r_scale = 1.0 / math.sqrt(hd)
+    return {
+        "w_in": dense_init(ks[0], cfg.dim, 4 * cfg.dim, dtype),   # i,f,z,o
+        "r": (jax.random.normal(ks[1], (4, nh, hd, hd), jnp.float32)
+              * r_scale).astype(dtype),
+        "b": jnp.zeros((4 * cfg.dim,), jnp.float32),
+        "out_proj": dense_init(ks[2], cfg.dim, cfg.dim, dtype),
+    }
+
+
+def _slstm_step(params, wx_t, carry, cfg: SLSTMConfig, policy):
+    """wx_t: (B, 4D) precomputed input projection for step t."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    b = h_prev.shape[0]
+    nh, hd = cfg.n_heads, cfg.head_dim
+    r = params["r"].astype(jnp.float32)
+    hh = h_prev.reshape(b, nh, hd)
+    rec = jnp.einsum("bhd,ghde->bghe", hh, r).reshape(b, 4 * cfg.dim)
+    pre = (wx_t + rec + params["b"]).reshape(b, 4, cfg.dim)
+    i_raw, f_raw, z_raw, o_raw = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_t = jnp.maximum(log_f + m_prev, i_raw)
+    i_p = jnp.exp(i_raw - m_t)
+    f_p = jnp.exp(log_f + m_prev - m_t)
+    c_t = f_p * c_prev + i_p * jnp.tanh(z_raw)
+    n_t = f_p * n_prev + i_p
+    h_t = jax.nn.sigmoid(o_raw) * c_t / jnp.maximum(n_t, 1.0)
+    return (h_t, c_t, n_t, m_t)
+
+
+def _slstm_scan(params, x, cfg: SLSTMConfig, policy):
+    b, s, d = x.shape
+    p = policy.cast(params)
+    wx = (x.astype(policy.compute_dtype) @ p["w_in"]).astype(jnp.float32)
+
+    def body(carry, wx_t):
+        new = _slstm_step(params, wx_t, carry, cfg, policy)
+        return new, new[0]
+
+    zeros = jnp.zeros((b, d), jnp.float32)
+    m0 = jnp.full((b, d), -1e30, jnp.float32)
+    carry, hs = jax.lax.scan(body, (zeros, zeros, zeros, m0),
+                             jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)                              # (B,S,D)
+    y = (y.astype(policy.compute_dtype) @ p["out_proj"]).astype(x.dtype)
+    return y, carry
+
+
+def apply_slstm(params, x, cfg: SLSTMConfig,
+                policy: DTypePolicy = DEFAULT_POLICY):
+    return _slstm_scan(params, x, cfg, policy)[0]
+
+
+def apply_slstm_prefill(params, x, cfg: SLSTMConfig,
+                        policy: DTypePolicy = DEFAULT_POLICY):
+    y, (h, c, n, m) = _slstm_scan(params, x, cfg, policy)
+    return y, {"h": h, "c": c, "n": n, "m": m}
+
+
+def apply_slstm_decode(params, x, cfg: SLSTMConfig, cache,
+                       policy: DTypePolicy = DEFAULT_POLICY):
+    p = policy.cast(params)
+    wx = (x.astype(policy.compute_dtype) @ p["w_in"]).astype(jnp.float32)
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    new = _slstm_step(params, wx[:, 0], carry, cfg, policy)
+    y = (new[0].astype(policy.compute_dtype) @ p["out_proj"])[:, None]
+    return y.astype(x.dtype), {"h": new[0], "c": new[1], "n": new[2],
+                               "m": new[3]}
+
+
+def init_slstm_cache(batch, cfg: SLSTMConfig):
+    zeros = jnp.zeros((batch, cfg.dim), jnp.float32)
+    return {"h": zeros, "c": zeros, "n": zeros,
+            "m": jnp.full((batch, cfg.dim), -1e30, jnp.float32)}

@@ -1,0 +1,129 @@
+"""Pure-JAX AdamW with schedules, global-norm clipping and configurable
+optimizer-state dtype (bf16 m/v halves the optimizer memory per device at
+1T-param scale — see DESIGN.md §5).
+
+API mirrors optax: ``init(params) -> state``; ``update(grads, state,
+params) -> (new_params, new_state, stats)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"         # cosine|linear|constant
+    min_lr_ratio: float = 0.1
+    state_dtype: jnp.dtype = jnp.float32   # bf16 for memory-constrained runs
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_ratio) * t
+    else:
+        decay = jnp.array(1.0)
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(a.astype(jnp.float32)))
+              for a in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda a: (a.astype(jnp.float32) * scale)
+                        .astype(a.dtype), tree), norm
+
+
+def adamw_init(cfg: AdamWConfig, params):
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay for norms / biases / 1-d params."""
+    name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+    return not any(t in name for t in ("scale", "bias", "b1", "b2",
+                                       "dt_bias", "a_log", "d_skip"))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        decay = cfg.weight_decay if (cfg.weight_decay and _decay_mask(path)
+                                     and p.ndim >= 2) else 0.0
+
+        def math(p, g, m, v):
+            # Native-dtype update for fully-bf16 leaves: the f32 casts of
+            # bf16 p/m/v get loop-hoisted by XLA into whole-stack f32
+            # copies (several 5 GB buffers on kimi train_4k).  f32 leaves
+            # keep exact f32 math.
+            cd = jnp.float32 if jnp.float32 in (p.dtype, m.dtype) \
+                else p.dtype
+            gf = g.astype(cd)
+            mf = m.astype(cd) * b1 + gf * (1 - b1)
+            vf = v.astype(cd) * b2 + jnp.square(gf) * (1 - b2)
+            upd_dir = (mf / bc1.astype(cd)) / (
+                jnp.sqrt(vf / bc2.astype(cd)) + cfg.eps)
+            pf = p.astype(cd)
+            if decay:
+                upd_dir = upd_dir + decay * pf
+            new_p = (pf - lr.astype(cd) * upd_dir).astype(p.dtype)
+            return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+        # Layer-stacked leaves (scan-over-layers params) are updated one
+        # layer at a time: the f32 intermediates of the update shrink by
+        # the stack depth (slab-sized f32 temporaries were ~5 GB/device
+        # each on kimi train_4k).
+        if p.ndim >= 3 and p.shape[0] >= 8 and p.size > 2 ** 24:
+            return jax.lax.map(lambda a: math(*a), (p, g, m, v))
+        return math(p, g, m, v)
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat[0]]
+    p_leaves = [l for _, l in flat[0]]
+    g_leaves = jax.tree.leaves(grads)
+    m_leaves = jax.tree.leaves(state["m"])
+    v_leaves = jax.tree.leaves(state["v"])
+    new = [upd(pa, p, g, m, v) for pa, p, g, m, v
+           in zip(paths, p_leaves, g_leaves, m_leaves, v_leaves)]
+    treedef = flat[1]
+    new_params = jax.tree_util.tree_unflatten(treedef, [n[0] for n in new])
+    new_m = jax.tree_util.tree_unflatten(treedef, [n[1] for n in new])
+    new_v = jax.tree_util.tree_unflatten(treedef, [n[2] for n in new])
+    stats = {"lr": lr, "grad_norm": gnorm, "step": step}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, stats

@@ -1,0 +1,184 @@
+"""Sharding rules: param-path patterns → PartitionSpecs.
+
+Parallelism layout (DESIGN.md §5):
+
+* ``model`` axis — tensor parallelism: attention heads / FFN hidden /
+  vocab / expert groups (MoE slabs are laid out per-shard, see moe.py).
+* ``data`` axis — data parallelism **and** FSDP: most 2-D weights also
+  shard their non-TP dim over ``data`` (ZeRO-3-style; XLA inserts the
+  all-gathers on use and reduce-scatters in backward).
+* ``pod`` axis — outer data parallelism across pods (DCN).  Parameters are
+  replicated across pods; gradients all-reduce hierarchically.
+
+Rules are matched by regex on the flattened parameter path; each rule
+gives the spec of the *trailing* dims — leading stacked-layer dims (from
+scan-over-layers) are padded with None automatically.  ``sanitize_spec``
+drops any axis whose size does not divide the corresponding array dim, so
+a single rule set serves every architecture/mesh combination.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (pattern, trailing-dims spec).  First match wins.  "fsdp" is substituted
+# with the data axis name; "tp" with the model axis name.
+#
+# NOTE on FSDP placement: weights are FSDP-sharded on their *contraction*
+# dim (maxtext-style).  This only stays cheap if activations are anchored
+# to batch-over-data sharding with explicit constraints (lm.py `_anchor`);
+# without the anchor the partitioner may instead unshard the batch to keep
+# the contraction sharded (observed: 40 GB full-batch logits + a 40 GB
+# all-reduce on the 4k train cell).  embed/head are vocab-sharded only —
+# their gather / logits-matmul patterns interact badly with contraction
+# sharding.
+PARAM_RULES = [
+    # --- embeddings / head ---
+    (r"embed$",                ("tp", None)),
+    (r"head$",                 (None, "tp")),
+    (r"pos_embed$",            (None, None)),
+    # --- MoE slabs: (M, E_loc, D, F_loc) laid out per model shard ---
+    (r"(gate_slab|up_slab)$",  ("tp", None, "fsdp", None)),
+    (r"down_slab$",            ("tp", None, None, "fsdp")),
+    (r"router$",               (None, None)),
+    # --- attention ---
+    (r"(wq|wk|wv)$",           ("fsdp", "tp")),
+    (r"wo$",                   ("tp", "fsdp")),
+    (r"(bq|bk|bv)$",           ("tp",)),
+    # --- dense FFN ---
+    (r"(gate|up|fc1)$",        ("fsdp", "tp")),
+    (r"(down|fc2)$",           ("tp", "fsdp")),
+    (r"b1$",                   ("tp",)),
+    (r"b2$",                   (None,)),
+    # --- mixers (mamba/mlstm/slstm): column-, then row-parallel ---
+    (r"(in_proj|w_in)$",       ("fsdp", "tp")),
+    (r"out_proj$",             ("tp", "fsdp")),
+    (r"\br$",                  (None, "tp", None, None)),   # sLSTM recurrent
+    (r"conv/w$",               (None, None, "tp")),
+    # --- GSPN mixer / attention generators (small): fsdp only ---
+    (r"(w_taps|w_lam|w_u|w_row)$", ("fsdp", None)),
+    (r"gspn/(down|up)$",       ("fsdp", None)),
+    (r"mix/(down|up)$",        ("fsdp", None)),
+    # --- encoder kv proj ---
+    (r"enc_kv_proj/(wk|wv)$",  ("fsdp", "tp")),
+    # --- vision convs / everything small: replicate ---
+    (r".*",                    None),
+]
+
+
+def path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def sanitize_spec(spec, shape, mesh: Mesh):
+    """Drop mesh axes that do not evenly divide the array dim."""
+    if spec is None:
+        return P()
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if dim % size == 0 else None)
+    return P(*out)
+
+
+def spec_for_param(path, leaf, mesh: Mesh, *, fsdp_axis="data",
+                   tp_axis="model") -> P:
+    name = path_str(path)
+    for pattern, trailing in PARAM_RULES:
+        if re.search(pattern, name):
+            if trailing is None:
+                return P()
+            sub = tuple(
+                fsdp_axis if t == "fsdp" else tp_axis if t == "tp" else t
+                for t in trailing)
+            pad = leaf.ndim - len(sub)
+            spec = (None,) * pad + sub
+            return sanitize_spec(spec, leaf.shape, mesh)
+    return P()
+
+
+def param_shardings(params, mesh: Mesh, *, fsdp_axis="data",
+                    tp_axis="model"):
+    """NamedSharding tree matching ``params`` (works on ShapeDtypeStructs)."""
+    def one(path, leaf):
+        spec = spec_for_param(path, leaf, mesh, fsdp_axis=fsdp_axis,
+                              tp_axis=tp_axis)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(opt_state, param_shardings_tree, mesh: Mesh):
+    """m/v mirror the param shardings; scalars replicated."""
+    def build(sub):
+        return jax.tree.map(lambda s: s, param_shardings_tree)
+
+    return {
+        "m": build(opt_state["m"]),
+        "v": build(opt_state["v"]),
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(batch, mesh: Mesh, dp_axes=("data",)):
+    """tokens/labels: batch dim over dp axes; embeds likewise."""
+    def one(path, leaf):
+        spec = sanitize_spec(P(dp_axes), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_shardings(caches, mesh: Mesh, dp_axes=("data",), tp_axis="model"):
+    """Decode caches: batch dim over dp, head/state dims over model where
+    divisible.  Caches are stacked (stage dims first); the batch dim is
+    found per-leaf by matching against known layouts, so we apply a simple
+    heuristic: shard the largest dim divisible by the dp size, leave the
+    rest replicated except kv-head dims over model."""
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+
+    def one(path, leaf):
+        name = path_str(path)
+        spec = [None] * leaf.ndim
+        # kv caches: (..., B, S, Hkv, hd) — shard B on dp; Hkv on model when
+        # divisible, otherwise shard the sequence dim on model (GQA models
+        # with few KV heads at 500k context: the cache must not replicate).
+        if re.search(r"attn/(k|v)$", name) and leaf.ndim >= 4:
+            if leaf.shape[-4] % dp_size == 0:
+                spec[-4] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            tp = mesh.shape[tp_axis]
+            if leaf.shape[-2] % tp == 0:
+                spec[-2] = tp_axis
+            elif leaf.shape[-3] % tp == 0:
+                spec[-3] = tp_axis
+        else:
+            # shard the first dim divisible by dp (usually batch)
+            for i, d in enumerate(leaf.shape):
+                if d % dp_size == 0 and d >= dp_size:
+                    spec[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                    break
+        return NamedSharding(mesh, sanitize_spec(P(*spec), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint with divisibility sanitising."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, sanitize_spec(spec, x.shape, mesh)))

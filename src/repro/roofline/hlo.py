@@ -1,0 +1,95 @@
+"""HLO-text analysis: collective payload extraction for the roofline's
+collective term (cost_analysis does not report collective bytes).
+
+We scan the post-SPMD optimized HLO for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops and sum their payload
+bytes with op-specific traffic multipliers (ring algorithms):
+
+    all-reduce         2 × payload        (reduce-scatter + all-gather)
+    all-gather         1 × output bytes
+    reduce-scatter     1 × input  bytes   (≈ output × shards)
+    all-to-all         1 × payload
+    collective-permute 1 × payload
+
+Payload = bytes of the op's result shape(s) — for reduce-scatter we use
+the operand shape parsed from the argument list when available.  These are
+per-device program shapes (post-partitioning), i.e. bytes crossing this
+chip's links, which is what the roofline denominator (chips × link_bw)
+expects.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(lhs: str) -> int:
+    """Bytes of the result shape(s) on the lhs of an HLO instruction."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(lhs):
+        if dtype in DTYPE_BYTES:
+            total += shape_bytes(dtype, dims)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op: bytes, ..., 'total': weighted_bytes, 'count': n}."""
+    per_op = defaultdict(float)
+    count = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if not line or "=" not in line:
+            continue
+        # e.g. "%ar = (bf16[128,1024]) all-reduce(...), replica_groups=..."
+        m = re.search(
+            r"=\s*(\([^)]*\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|"
+            r"all-to-all|collective-permute)(-start|-done)?\(", line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # counted at -start
+        lhs, op = m.group(1), m.group(2)
+        payload = _result_bytes(lhs)
+        if op == "reduce-scatter":
+            # input bytes ≈ output × shard count; parse operand shapes
+            args = line[m.end():]
+            in_bytes = _result_bytes(args.split("),", 1)[0])
+            payload = max(payload, in_bytes)
+        per_op[op] += payload * _MULT[op]
+        count += 1
+    out = dict(per_op)
+    out["total"] = float(sum(per_op.values()))
+    out["count"] = count
+    return out
+
+
+def op_census(hlo_text: str, opcodes=("fusion", "dot", "convolution",
+                                      "scatter", "gather", "while")) -> dict:
+    census = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9-]*)\(",
+                      line.strip())
+        if m and m.group(1) in opcodes:
+            census[m.group(1)] += 1
+    return dict(census)

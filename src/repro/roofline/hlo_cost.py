@@ -1,0 +1,281 @@
+"""HLO-text cost model with while-loop trip-count correction.
+
+XLA's ``compiled.cost_analysis()`` visits every instruction ONCE — a
+``lax.scan`` body (our scan-over-layers, microbatch accumulation, the
+flash-attention KV loop...) is counted a single time regardless of trip
+count, underestimating FLOPs/bytes by up to the model depth.  This module
+re-derives the three roofline inputs from the optimized HLO text:
+
+* **flops** — dot (2·out_elems·K from resolved operand shapes and
+  ``lhs_contracting_dims``) and an approximate convolution count; summed
+  over every executed computation weighted by the product of enclosing
+  while-loop trip counts (from ``backend_config known_trip_count``, falling
+  back to the largest constant in the loop condition).
+* **bytes** — operand + result bytes of top-level instructions of executed
+  computations, trip-weighted.  Fusion bodies are excluded: a fusion's HBM
+  traffic is its call site's operands/results (on-chip traffic is free).
+  Deliberately ignores cache reuse — an upper-bound HBM model.
+* **collective bytes** — payloads of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute with ring-traffic
+  multipliers (all-reduce 2×), trip-weighted.
+
+All quantities are per-device (post-SPMD per-device program).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_COLL_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "while", "call", "conditional"}
+
+_COMP_HDR = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+# lhs is matched lazily: tuple result shapes contain `/*index=N*/`
+# comments (with '=') and layout annotations, so anything up to the first
+# " opcode(" token is the result shape.
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+    r"([a-z][\w\-]*)\((.*)$")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        if dt in DTYPE_BYTES:
+            total += _shape_elems(dims) * DTYPE_BYTES[dt]
+    return total
+
+
+def _split_args_attrs(rest: str):
+    """rest = everything after 'opcode(' to line end.  Returns
+    (args_text, attrs_text) by matching the closing paren."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    lhs: str
+    args: str
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)      # instr name -> lhs text
+
+
+def parse_computations(hlo: str):
+    comps, cur, entry = {}, None, None
+    for line in hlo.splitlines():
+        mh = _COMP_HDR.match(line)
+        if mh:
+            cur = Computation(mh.group(2), is_entry=bool(mh.group(1)))
+            comps[cur.name] = cur
+            if cur.is_entry:
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if mi:
+            name, lhs, opcode, rest = mi.groups()
+            args, attrs = _split_args_attrs(rest)
+            ins = Instr(name=name, opcode=opcode, lhs=lhs, args=args,
+                        attrs=attrs)
+            cur.instrs.append(ins)
+            cur.shapes[name] = lhs
+    return comps, entry
+
+
+def _refs(ins: Instr) -> dict:
+    out = {}
+    for key in ("body", "condition", "to_apply", "calls"):
+        m = re.search(rf"{key}=%?([\w.\-]+)", ins.attrs)
+        if m:
+            out[key] = m.group(1)
+    return out
+
+
+def _trip_count(ins: Instr, comps) -> int:
+    m = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"', ins.attrs)
+    if not m:
+        m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.attrs)
+    if m:
+        return max(int(m.group(1)), 1)
+    cond = comps.get(_refs(ins).get("condition"))
+    best = 1
+    if cond is not None:
+        for ci in cond.instrs:
+            for mm in re.finditer(r"constant\((\d+)\)", ci.args + ci.attrs
+                                  + ci.lhs + ci.opcode):
+                best = max(best, int(mm.group(1)))
+            if ci.opcode == "constant":
+                mm = re.search(r"s32\[\][^%]*", ci.lhs)
+        # constants appear as standalone instrs: constant(7) in raw text
+    return best
+
+
+def _operand_names(args: str):
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = sum(_shape_elems(d) for t, d in _SHAPE.findall(ins.lhs)
+                    if t in DTYPE_BYTES)
+    ops = _operand_names(ins.args)
+    if not ops:
+        return 0.0
+    lhs_shape = comp.shapes.get(ops[0], "")
+    m = _SHAPE.search(lhs_shape)
+    if not m:
+        return 0.0
+    lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    k = 1
+    if mc and mc.group(1):
+        for idx in mc.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = sum(_shape_elems(d) for t, d in _SHAPE.findall(ins.lhs)
+                    if t in DTYPE_BYTES)
+    ops = _operand_names(ins.args)
+    if len(ops) < 2:
+        return 0.0
+    kshape = comp.shapes.get(ops[1], "")
+    m = _SHAPE.search(kshape)
+    if not m:
+        return 0.0
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    if not dims:
+        return 0.0
+    per_out = max(_shape_elems(m.group(2)) // max(dims[-1], 1), 1)
+    return 2.0 * out_elems * per_out
+
+
+def _instr_bytes(ins: Instr, comp: Computation) -> int:
+    total = _shapes_bytes(ins.lhs)
+    for op in _operand_names(ins.args):
+        total += _shapes_bytes(comp.shapes.get(op, ""))
+    return total
+
+
+def analyze(hlo: str) -> dict:
+    comps, entry = parse_computations(hlo)
+    if entry is None and comps:
+        entry = next(iter(comps))
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0,
+                "collectives": {"total": 0.0, "count": 0}}
+
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                r = _refs(ins)
+                if "calls" in r:
+                    fusion_bodies.add(r["calls"])
+
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    order, seen = [entry], {entry}
+    trips_seen = {}
+    while order:
+        name = order.pop(0)
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mult[name]
+        for ins in comp.instrs:
+            r = _refs(ins)
+            if not r:
+                continue
+            if ins.opcode == "while":
+                trips = _trip_count(ins, comps)
+                trips_seen[r.get("body", "?")] = trips
+                factor = m * trips
+            else:
+                factor = m
+            for key, target in r.items():
+                mult[target] += factor
+                if target not in seen:
+                    seen.add(target)
+                    order.append(target)
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    bytes_unit = 0.0     # multiplier-free (= XLA's visit-once convention)
+    coll = defaultdict(float)
+    coll_count = 0
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = name in fusion_bodies
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, comp)
+            elif ins.opcode == "convolution":
+                flops += m * _conv_flops(ins, comp)
+            base = ins.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not ins.opcode.endswith("-done"):
+                payload = _shapes_bytes(ins.lhs)
+                if base == "reduce-scatter":
+                    for op in _operand_names(ins.args):
+                        payload = max(payload,
+                                      _shapes_bytes(comp.shapes.get(op, "")))
+                coll[base] += m * payload * _COLL_MULT[base]
+                coll_count += 1
+            if not in_fusion and ins.opcode not in _SKIP_BYTES \
+                    and not ins.opcode.endswith("-done"):
+                b = _instr_bytes(ins, comp)
+                bytes_hbm += m * b
+                bytes_unit += b
+    out_coll = dict(coll)
+    out_coll["total"] = float(sum(coll.values()))
+    out_coll["count"] = coll_count
+    return {"flops": float(flops), "bytes": float(bytes_hbm),
+            "bytes_unit": float(bytes_unit),
+            "trip_ratio": float(bytes_hbm / bytes_unit) if bytes_unit
+            else 1.0,
+            "collectives": out_coll, "while_trips": trips_seen,
+            "n_computations": len(comps)}

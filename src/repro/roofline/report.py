@@ -1,0 +1,42 @@
+"""Inject generated roofline tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.roofline.report \
+        --baseline results/dryrun --optimized results/dryrun_v2
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+
+from repro.roofline.analysis import analyze_dir, markdown_table
+
+
+def table_for(dry_dir: str) -> str:
+    rows, skips, errors = analyze_dir(dry_dir, "single")
+    skip_lines = [f"* skipped: {s['arch']} × {s['shape']} — "
+                  f"{s.get('reason', '')[:80]}…" for s in skips]
+    out = markdown_table(rows)
+    out += (f"\n\n{len(rows)} cells compiled, {len(skips)} skipped by "
+            f"assignment rule, {len(errors)} errors.\n")
+    if skip_lines:
+        out += "\n" + "\n".join(sorted(set(skip_lines))) + "\n"
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="results/dryrun")
+    ap.add_argument("--optimized", default="results/dryrun_v2")
+    ap.add_argument("--doc", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+
+    doc = open(args.doc).read()
+    doc = doc.replace("<!-- BASELINE_TABLE -->", table_for(args.baseline))
+    doc = doc.replace("<!-- OPTIMIZED_TABLE -->", table_for(args.optimized))
+    open(args.doc, "w").write(doc)
+    print(f"wrote tables into {args.doc}")
+
+
+if __name__ == "__main__":
+    main()

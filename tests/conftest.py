@@ -1,0 +1,18 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see ONE
+CPU device; multi-device tests spawn subprocesses with their own flags."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _single_device_guard():
+    assert len(jax.devices()) == 1, (
+        "tests must run on a single device; the dry-run sets its own flags")
+    yield
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,104 @@
+"""Attention: flash custom_vjp vs full reference, decode vs full,
+RoPE/M-RoPE consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (AttentionConfig, apply_attention,
+                                    apply_attention_decode,
+                                    chunked_attention, decode_attention,
+                                    full_attention, init_attention,
+                                    init_kv_cache)
+from repro.models.layers import apply_mrope, apply_rope
+
+
+def _qkv(b=2, s=64, hq=6, hkv=2, d=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, s, hq, d)),
+            jax.random.normal(ks[1], (b, s, hkv, d)),
+            jax.random.normal(ks[2], (b, s, hkv, d)))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("block_k", [8, 16, 64])
+def test_flash_matches_full(causal, block_k):
+    q, k, v = _qkv()
+    o1 = chunked_attention(q, k, v, causal=causal, block_k=block_k)
+    o2 = full_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_grads_match_full(causal):
+    q, k, v = _qkv(s=32)
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(
+            jnp.sin(fn(q, k, v)))
+
+    g1 = jax.grad(loss(lambda q, k, v: chunked_attention(
+        q, k, v, causal=causal, block_k=8)), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss(lambda q, k, v: full_attention(
+        q, k, v, causal=causal)), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_decode_matches_full_layerwise():
+    cfg = AttentionConfig(dim=32, n_heads=4, n_kv_heads=2, qkv_bias=True)
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, 32))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    y_full = apply_attention(params, x, cfg, positions=pos)
+    cache = init_kv_cache(b, 16, cfg, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = apply_attention_decode(params, x[:, t:t + 1], cfg, cache)
+        outs.append(y[:, 0])
+    y_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec, np.float32),
+                               np.asarray(y_full, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE inner products depend only on relative offsets."""
+    d = 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 1, d))
+    p0 = jnp.array([[0, 3]])
+    p1 = jnp.array([[5, 8]])
+    r0 = apply_rope(x, p0)
+    r1 = apply_rope(x, p1)
+    dot0 = jnp.sum(r0[0, 0, 0] * r0[0, 1, 0])
+    dot1 = jnp.sum(r1[0, 0, 0] * r1[0, 1, 0])
+    np.testing.assert_allclose(float(dot0), float(dot1), rtol=1e-5)
+
+
+def test_mrope_reduces_to_rope_for_text():
+    d = 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 3, d))
+    pos = jnp.broadcast_to(jnp.arange(6), (2, 6))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 6))
+    a = apply_rope(x, pos)
+    b = apply_mrope(x, pos3, sections=(4, 2, 2))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_decode_attention_masks_beyond_length():
+    q, k, v = _qkv(b=2, s=8, hq=4, hkv=2, d=8, seed=3)
+    q1 = q[:, :1]
+    out_full = decode_attention(q1, k, v, jnp.array([8, 8]))
+    # poisoning cache beyond the valid length must not change the output
+    k2 = k.at[:, 5:].set(1e3)
+    v2 = v.at[:, 5:].set(1e3)
+    out_masked = decode_attention(q1, k2, v2, jnp.array([5, 5]))
+    out_ref = decode_attention(q1, k, v, jnp.array([5, 5]))
+    np.testing.assert_allclose(np.asarray(out_masked), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(out_full), np.asarray(out_ref))

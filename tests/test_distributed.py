@@ -1,0 +1,199 @@
+"""Multi-device behaviour (8 fake CPU devices in subprocesses, so the rest
+of the suite keeps a single device): MoE shard_map equivalence, pipeline
+parallel, int8-EF compressed all-reduce, fault-tolerant + elastic trainer,
+sharded-vs-single-device train-step numerics."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def run_sub(body: str, timeout=560):
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        AUTO = (jax.sharding.AxisType.Auto,)
+    """) + textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=timeout, env=None)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+
+
+def test_moe_shard_map_matches_local():
+    run_sub("""
+        from repro.models.moe import MoEConfig, init_moe, apply_moe
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 16))
+        mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=AUTO*2)
+        cfg4 = MoEConfig(dim=16, n_experts=8, top_k=2, d_ff=32, n_shards=4,
+                         capacity_factor=8.0)
+        cfg1 = MoEConfig(dim=16, n_experts=8, top_k=2, d_ff=32, n_shards=1,
+                         capacity_factor=8.0)
+        p4 = init_moe(jax.random.PRNGKey(0), cfg4)
+        g = jnp.concatenate([p4["gate_slab"][m] for m in range(4)], 0)[None]
+        u = jnp.concatenate([p4["up_slab"][m] for m in range(4)], 0)[None]
+        d = jnp.concatenate([p4["down_slab"][m] for m in range(4)], 0)[None]
+        p1 = {"router": p4["router"], "gate_slab": g, "up_slab": u,
+              "down_slab": d}
+        y_ref, _ = apply_moe(p1, x, cfg1)
+        with jax.set_mesh(mesh):
+            y4, _ = jax.jit(lambda p, x: apply_moe(p, x, cfg4, mesh=mesh,
+                                                   dp_axes=("data",)))(p4, x)
+        np.testing.assert_allclose(np.array(y4, np.float32),
+                                   np.array(y_ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+    """)
+
+
+def test_moe_tp_split_experts():
+    run_sub("""
+        from repro.models.moe import MoEConfig, init_moe, apply_moe
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 16))
+        mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=AUTO*2)
+        cfg_tp = MoEConfig(dim=16, n_experts=2, top_k=1, d_ff=32,
+                           n_shards=4, capacity_factor=4.0)
+        ptp = init_moe(jax.random.PRNGKey(2), cfg_tp)
+        gt = jnp.stack([jnp.concatenate([ptp["gate_slab"][2*e+t, 0]
+                        for t in range(2)], -1) for e in range(2)])[None]
+        ut = jnp.stack([jnp.concatenate([ptp["up_slab"][2*e+t, 0]
+                        for t in range(2)], -1) for e in range(2)])[None]
+        dt = jnp.stack([jnp.concatenate([ptp["down_slab"][2*e+t, 0]
+                        for t in range(2)], 0) for e in range(2)])[None]
+        cfg1 = MoEConfig(dim=16, n_experts=2, top_k=1, d_ff=64, n_shards=1,
+                         capacity_factor=4.0)
+        p1 = {"router": ptp["router"], "gate_slab": gt, "up_slab": ut,
+              "down_slab": dt}
+        y_ref, _ = apply_moe(p1, x, cfg1)
+        with jax.set_mesh(mesh):
+            y, _ = jax.jit(lambda p, x: apply_moe(p, x, cfg_tp, mesh=mesh,
+                                                  dp_axes=("data",)))(ptp, x)
+        np.testing.assert_allclose(np.array(y, np.float32),
+                                   np.array(y_ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+    """)
+
+
+def test_pipeline_matches_sequential():
+    run_sub("""
+        from repro.parallel.pipeline import pipeline_apply
+        pmesh = jax.make_mesh((4,), ("pipe",), axis_types=AUTO)
+        ws = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 16)) * 0.3
+        x = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 16))
+        with jax.set_mesh(pmesh):
+            y = pipeline_apply(pmesh, "pipe",
+                               lambda w, x: jnp.tanh(x @ w["w"]),
+                               {"w": ws}, x, n_micro=6)
+        ref = x
+        for i in range(4):
+            ref = jnp.tanh(ref @ ws[i])
+        np.testing.assert_allclose(np.array(y), np.array(ref),
+                                   rtol=1e-5, atol=1e-5)
+    """)
+
+
+def test_compressed_allreduce_and_error_feedback():
+    run_sub("""
+        from repro.parallel.collectives import compressed_allreduce
+        cmesh = jax.make_mesh((8,), ("pod",), axis_types=AUTO)
+        g = jax.random.normal(jax.random.PRNGKey(2), (8, 32, 16))
+        e = jnp.zeros((8, 32, 16))
+        exact = g.mean(axis=0)
+        with jax.set_mesh(cmesh):
+            fn = jax.jit(compressed_allreduce(cmesh, "pod"))
+            gh, ee = fn(g, e)
+            err1 = float(jnp.abs(gh - exact).max() / jnp.abs(exact).max())
+            acc = jnp.zeros_like(exact)
+            for _ in range(20):
+                gh, ee = fn(g, ee)
+                acc = acc + gh
+            errT = float(jnp.abs(acc / 20 - exact).max()
+                         / jnp.abs(exact).max())
+        assert err1 < 0.15, err1
+        assert errT < err1 / 5, (err1, errT)
+    """)
+
+
+def test_trainer_fault_tolerance_and_elastic():
+    run_sub("""
+        import tempfile, logging
+        logging.disable(logging.WARNING)
+        from repro.models.lm import LMConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.data.pipeline import DataConfig
+        from repro.train.trainer import (Trainer, ElasticTrainer,
+                                         TrainerConfig)
+        cfg = LMConfig(name="d", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                       unit=(("attn", 2),), n_units=1, remat="none")
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+        dcfg = DataConfig(vocab=256, seq_len=32, global_batch=8)
+        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=AUTO*2)
+        fails = {7, 13}
+        def injector(step):
+            if step in fails:
+                fails.discard(step)
+                raise RuntimeError("injected")
+        with tempfile.TemporaryDirectory() as d:
+            tr = Trainer(cfg, ocfg, dcfg,
+                         TrainerConfig(ckpt_dir=d, ckpt_every=5,
+                                       log_every=1000),
+                         mesh=mesh, failure_injector=injector)
+            hist = tr.run(20)
+        assert tr.recoveries == 2 and tr.step == 20
+        assert hist[-1] < hist[0], (hist[0], hist[-1])
+
+        polls = [jax.devices(), jax.devices()[:4], jax.devices()[:4]]
+        def monitor():
+            return polls[0] if len(polls) == 1 else polls.pop(0)
+        def builder(devs):
+            return jax.make_mesh((len(devs)//2, 2), ("data", "model"),
+                                 axis_types=AUTO*2, devices=devs)
+        with tempfile.TemporaryDirectory() as d:
+            tr = ElasticTrainer(cfg, ocfg, dcfg,
+                                TrainerConfig(ckpt_dir=d, ckpt_every=5,
+                                              log_every=1000),
+                                mesh=mesh, device_monitor=monitor,
+                                mesh_builder=builder)
+            tr.run(20, remesh_every=8)
+        assert tr.step == 20 and tr.mesh.devices.size == 4
+    """)
+
+
+def test_sharded_train_step_matches_single_device():
+    run_sub("""
+        import functools
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.models.lm import LMConfig, init_lm
+        from repro.optim.adamw import AdamWConfig, adamw_init
+        from repro.train.step import build_train_step
+        from repro.parallel import sharding as shd
+        cfg = LMConfig(name="d", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                       unit=(("attn", 2),), n_units=1, remat="none")
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=0, schedule="constant")
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        state = {"params": params, "opt": adamw_init(ocfg, params)}
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 256)
+        batch = {"tokens": toks, "labels": toks}
+        s_ref, m_ref = build_train_step(cfg, ocfg)(state, batch)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=AUTO*2)
+        ps = shd.param_shardings(params, mesh)
+        ssh = {"params": ps, "opt": {"m": ps, "v": ps,
+               "step": NamedSharding(mesh, P())}}
+        bs = shd.batch_shardings(batch, mesh, ("data",))
+        with jax.set_mesh(mesh):
+            step = jax.jit(build_train_step(cfg, ocfg, mesh=mesh,
+                                            dp_axes=("data",)),
+                           in_shardings=(ssh, bs),
+                           out_shardings=(ssh, None))
+            s_sh, m_sh = step(state, batch)
+        assert abs(float(m_sh["loss"]) - float(m_ref["loss"])) < 2e-2
+        for a, b in zip(jax.tree.leaves(s_sh["params"]),
+                        jax.tree.leaves(s_ref["params"])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=3e-2, atol=3e-3)
+    """)

@@ -1,0 +1,74 @@
+"""Trip-corrected HLO cost model: exact on known programs."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline.hlo_cost import analyze
+from repro.roofline.hlo import collective_bytes, op_census
+
+
+def _scan_matmul(trips=7, m=64, k=128, n=128):
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=trips)
+        return y
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    w = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return f, x, w, 2 * m * k * n * trips
+
+
+def test_forward_flops_exact():
+    f, x, w, expect = _scan_matmul()
+    c = jax.jit(f).lower(x, w).compile()
+    res = analyze(c.as_text())
+    assert 0.99 < res["flops"] / expect < 1.01
+    assert res["while_trips"] and list(res["while_trips"].values()) == [7]
+
+
+def test_grad_flops_3x():
+    f, x, w, expect = _scan_matmul()
+    g = jax.jit(jax.grad(lambda x, w: jnp.sum(f(x, w)), argnums=1))
+    res = analyze(g.lower(x, w).compile().as_text())
+    assert 0.9 < res["flops"] / (3 * expect) < 1.2
+
+
+def test_remat_flops_4x():
+    trips, m, k, n = 7, 64, 128, 128
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(jax.checkpoint(body), x, None, length=trips)
+        return y
+
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    w = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    g = jax.jit(jax.grad(lambda x, w: jnp.sum(f(x, w)), argnums=1))
+    res = analyze(g.lower(x, w).compile().as_text())
+    expect = 2 * m * k * n * trips
+    assert 3.8 < res["flops"] / expect < 4.3
+
+
+def test_bytes_scale_with_trips():
+    f7 = _scan_matmul(trips=7)
+    f14 = _scan_matmul(trips=14)
+    b7 = analyze(jax.jit(f7[0]).lower(f7[1], f7[2]).compile().as_text())
+    b14 = analyze(jax.jit(f14[0]).lower(f14[1], f14[2]).compile().as_text())
+    ratio = b14["bytes"] / b7["bytes"]
+    assert 1.6 < ratio < 2.2, ratio
+
+
+def test_collective_parser_on_psum():
+    import numpy as np
+
+    def f(x):
+        return jax.lax.psum(x, "i")
+
+    fn = jax.pmap(f, axis_name="i")
+    x = jnp.ones((1, 128, 128))
+    c = fn.lower(x).compile()
+    txt = c.as_text() if isinstance(c.as_text(), str) else c.as_text()[0]
+    coll = collective_bytes(txt)
+    assert coll["total"] >= 128 * 128 * 4  # one all-reduce, 2x multiplier
+    assert coll["count"] >= 1

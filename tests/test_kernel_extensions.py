@@ -1,0 +1,53 @@
+"""Beyond-paper kernel extensions: fused dual-direction scan (§4.3 stream
+concurrency analogue) and the VMEM-aware tile tuner."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gspn as G
+from repro.kernels import ref as R
+from repro.kernels.gspn_multidir import gspn_scan_bidir_pallas
+from repro.kernels.tuning import (VMEM_BYTES, pick_row_tile,
+                                  scan_working_set)
+
+
+@pytest.mark.parametrize("shape,cpw", [((4, 16, 24), 2), ((2, 8, 128), 1),
+                                       ((6, 32, 16), 3)])
+def test_bidir_kernel_matches_per_direction(shape, cpw):
+    gd, h, w = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (gd, h, w))
+    lam2 = jax.random.normal(ks[1], (2, gd, h, w))
+    wl0, wc0, wr0 = G.normalize_taps(
+        jax.random.normal(ks[2], (gd // cpw, h, w, 3)))
+    wl1, wc1, wr1 = G.normalize_taps(
+        jax.random.normal(ks[3], (gd // cpw, h, w, 3)))
+    taps = {"wl": jnp.stack([wl0, wl1]), "wc": jnp.stack([wc0, wc1]),
+            "wr": jnp.stack([wr0, wr1])}
+    out = gspn_scan_bidir_pallas(x, taps, lam2, channels_per_weight=cpw,
+                                 row_tile=4)
+    ref_tb = R.gspn_scan_ref(x, wl0, wc0, wr0, lam2[0])
+    ref_bt = jnp.flip(R.gspn_scan_ref(
+        jnp.flip(x, 1), jnp.flip(wl1, 1), jnp.flip(wc1, 1),
+        jnp.flip(wr1, 1), jnp.flip(lam2[1], 1)), 1)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref_tb),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(ref_bt),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_tile_tuner_respects_budget_and_divisibility():
+    for h, w in [(4096, 1024), (1024, 512), (224, 224), (48, 64)]:
+        tc = pick_row_tile(h, w, 4)
+        assert h % tc.row_tile == 0
+        assert tc.working_set_bytes <= VMEM_BYTES or tc.row_tile == 1
+        assert tc.n_grid_steps * tc.row_tile == h
+
+
+def test_tile_tuner_shrinks_with_width():
+    wide = pick_row_tile(4096, 16384, 4)
+    narrow = pick_row_tile(4096, 256, 4)
+    assert wide.row_tile <= narrow.row_tile
+    assert scan_working_set(wide.row_tile, 16384, 4) <= VMEM_BYTES

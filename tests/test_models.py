@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests (reduced configs of the same family) and
+prefill/decode equivalence for every cache type."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.all_archs import ASSIGNED, EXTRAS
+from repro.configs.base import get_arch
+from repro.models.lm import (apply_lm, init_lm, init_lm_cache,
+                             lm_decode_step, lm_loss, lm_prefill,
+                             count_params, count_active_params)
+
+ALL = ASSIGNED + EXTRAS
+
+
+def _batch_for(cfg, b=2, s=24, seed=0):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0,
+                                cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (b, s // 2, cfg.d_model))
+    if cfg.family == "audio":
+        batch["enc_frames"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 2), (b, cfg.enc_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_reduced_forward_and_train_step(arch):
+    """One forward + one grad step on CPU: output shapes + no NaNs."""
+    cfg = get_arch(arch).reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    batch = _batch_for(cfg)
+    logits, aux = apply_lm(params, cfg, batch["tokens"],
+                           vision_embeds=batch.get("vision_embeds"),
+                           enc_frames=batch.get("enc_frames"))
+    assert logits.shape == (2, 24, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    loss, metrics = lm_loss(params, cfg, batch)
+    assert np.isfinite(float(loss))
+
+    grads = jax.grad(lambda p: lm_loss(p, cfg, batch)[0])(params)
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "xlstm-1.3b", "zamba2-2.7b",
+                                  "kimi-k2-1t-a32b", "qwen2-1.5b-gspn"])
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_arch(arch).reduced()
+    import dataclasses
+    # high capacity so MoE drops don't perturb the equivalence check
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    b, s_p, s_tot = 2, 9, 14
+    toks = jax.random.randint(jax.random.PRNGKey(7), (b, s_tot), 0,
+                              cfg.vocab)
+    logits_full, _ = apply_lm(params, cfg, toks)
+    logits_pf, caches, _ = lm_prefill(params, cfg, toks[:, :s_p], max_len=20)
+    np.testing.assert_allclose(
+        np.asarray(logits_pf, np.float32),
+        np.asarray(logits_full[:, :s_p], np.float32), rtol=3e-2, atol=3e-2)
+    outs = []
+    for t in range(s_p, s_tot):
+        lg, caches = lm_decode_step(params, cfg, toks[:, t:t + 1], caches)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(outs, 1), np.float32),
+        np.asarray(logits_full[:, s_p:], np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_audio_decode_with_cross_attention():
+    cfg = get_arch("whisper-base").reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, cfg.vocab)
+    frames = jax.random.normal(jax.random.PRNGKey(4),
+                               (b, cfg.enc_len, cfg.d_model))
+    logits_full, _ = apply_lm(params, cfg, toks, enc_frames=frames)
+    logits_pf, caches, enc_kv = lm_prefill(params, cfg, toks[:, :5],
+                                           max_len=16, enc_frames=frames)
+    np.testing.assert_allclose(np.asarray(logits_pf, np.float32),
+                               np.asarray(logits_full[:, :5], np.float32),
+                               rtol=3e-2, atol=3e-2)
+    outs = []
+    for t in range(5, s):
+        lg, caches = lm_decode_step(params, cfg, toks[:, t:t + 1], caches,
+                                    enc_kv=enc_kv)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(outs, 1), np.float32),
+        np.asarray(logits_full[:, 5:], np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_full_config_dims_exact():
+    """The full configs carry the exact published dimensions."""
+    expect = {
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+    }
+    for arch, (l, d, h, kv, ff, v) in expect.items():
+        cfg = get_arch(arch).full()
+        assert cfg.n_layers == l and cfg.d_model == d, arch
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv, arch
+        assert cfg.d_ff == ff or arch == "kimi-k2-1t-a32b", arch
+        assert cfg.vocab == v, arch
+    kimi = get_arch("kimi-k2-1t-a32b").full()
+    assert (kimi.n_layers, kimi.d_model, kimi.n_experts, kimi.top_k,
+            kimi.moe_d_ff, kimi.vocab) == (61, 7168, 384, 8, 2048, 163840)
+    grok = get_arch("grok-1-314b").full()
+    assert (grok.n_experts, grok.top_k) == (8, 2)
+
+
+def test_param_scale_sanity():
+    """Active-parameter estimates land near the advertised scales."""
+    approx = {
+        "xlstm-1.3b": (1.0e9, 2.2e9),
+        "qwen1.5-32b": (28e9, 38e9),
+        "granite-3-2b": (2.0e9, 3.3e9),
+        "qwen2-1.5b": (1.2e9, 2.0e9),
+        "qwen2.5-3b": (2.5e9, 3.9e9),
+        "zamba2-2.7b": (2.0e9, 3.5e9),
+        "qwen2-vl-72b": (60e9, 80e9),
+        "grok-1-314b": (70e9, 90e9),   # active (top-2 of 8)
+    }
+    for arch, (lo, hi) in approx.items():
+        n = count_active_params(get_arch(arch).full())
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_layer_pattern_counts():
+    assert get_arch("xlstm-1.3b").full().layer_count() == 48
+    assert get_arch("zamba2-2.7b").full().layer_count() == 54 + 9
+    assert get_arch("kimi-k2-1t-a32b").full().layer_count() == 61
