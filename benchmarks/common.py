@@ -11,6 +11,11 @@ from repro.core import gspn as G
 
 ROWS = []
 
+# Set by ``benchmarks.run --smoke``: every rung runs exactly one timed
+# iteration so a full bench sweep can gate a PR in seconds.  Timings are
+# then indicative only — the CSV still exercises every code path.
+SMOKE = False
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     line = f"{name},{us_per_call:.1f},{derived}"
@@ -20,6 +25,8 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
     """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    if SMOKE:
+        iters, warmup = 1, min(warmup, 1)
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []

@@ -2,7 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3,table1,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,table1,...] [--smoke]
+
+``--smoke`` runs every rung with a single timed iteration — a cheap CI
+gate that exercises all benchmark code paths without meaningful timings.
 """
 
 import argparse
@@ -11,6 +14,7 @@ import traceback
 
 MODULES = [
     ("fig3", "benchmarks.fig3_kernel_ladder"),
+    ("multidir", "benchmarks.multidir_ladder"),
     ("table1", "benchmarks.table1_throughput"),
     ("fig4", "benchmarks.fig4_scaling"),
     ("table2", "benchmarks.table2_imagenet"),
@@ -22,8 +26,13 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 timed iteration per rung (CI smoke gate)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        import benchmarks.common as common
+        common.SMOKE = True
 
     print("name,us_per_call,derived")
     failed = []

@@ -4,14 +4,20 @@ Building blocks:
 
 * :func:`normalize_taps` — Stability–Context row-stochastic normalisation of
   the 3-tap propagation logits (masked softmax; boundary taps excluded).
-* :func:`directional_scan` — maps the four directional passes (T→B, B→T,
-  L→R, R→L) onto the canonical top-to-bottom kernel scan via flips and
-  transposes (the TPU analogue of the paper's per-direction CUDA streams:
-  directions become batched data parallelism).
+* :func:`directional_scan` — the multi-direction dispatch (DESIGN.md §2).
+  Opposite directions (T→B/B→T, L→R/R→L) are FUSED into one
+  ``gspn_scan_pair`` launch each — the reverse member of a pair is index
+  arithmetic inside the kernel, and the horizontal pair costs a single
+  transpose of ``x`` at the dispatch boundary — so a full four-direction
+  pass issues two fused calls instead of four per-direction scans over
+  flipped/transposed copies (the TPU analogue of the paper's §4.3
+  stream-based concurrency).  A single direction string is still accepted
+  and maps onto the canonical top-to-bottom scan.
 * :class:`GSPNAttentionConfig` + ``init/apply_gspn_attention`` — the full
   GSPN-2 attention module with **compact channel propagation**:
   channel-shared affinity taps and a compressive proxy space
-  ``C → C_proxy → C`` (paper §4.2, App. D).
+  ``C → C_proxy → C`` (paper §4.2, App. D), routed through the fused
+  multi-direction dispatch.
 * ``init/apply_gspn_seq_mixer`` — the 1D-sequence adaptation used as a
   sub-quadratic causal token mixer for language models (DESIGN.md §4):
   fold L → (H, W), causal T→B 2D scan + causal within-row scan.
@@ -29,9 +35,13 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import gspn_scan
+from repro.kernels.ops import gspn_scan, gspn_scan_pair
 
 DIRECTIONS = ("tb", "bt", "lr", "rl")
+
+# Opposite-direction pairs fused into one kernel launch each: the first
+# member is the canonical (forward) traversal, the second its mirror.
+OPPOSITE_PAIRS = (("tb", "bt"), ("lr", "rl"))
 
 
 # ---------------------------------------------------------------------------
@@ -97,11 +107,28 @@ def _from_canonical(a, direction: str):
     raise ValueError(direction)
 
 
-def directional_scan(x, wl, wc, wr, lam, direction: str, **scan_kwargs):
-    """Run one directional pass.  x, lam: (G, H, W); w*: (G_w, H, W) in the
-    ORIGINAL orientation; tap logits must already be produced for the
-    oriented geometry (callers orient positions before generating taps, so
-    taps always refer to the scan geometry — see apply_gspn_attention)."""
+def directional_scan(x, wl, wc, wr, lam, direction, **scan_kwargs):
+    """Run one or several directional passes through the fused dispatch.
+
+    Single direction (``direction`` a string): x, lam: (G, H, W); w*:
+    (G_w, H, W) in the ORIGINAL orientation; returns (G, H, W).
+
+    Multi-direction (``direction`` a sequence of distinct direction names):
+    w*: (D, G_w, H, W) and lam: (D, G, H, W) stacked per direction, again
+    in the ORIGINAL orientation; ``x`` is shared by every direction.
+    Returns (D, G, H, W).  Opposite pairs present in the sequence are
+    fused into ONE ``gspn_scan_pair`` launch each (the L→R/R→L pair via a
+    single transpose of the operands at this boundary — no per-direction
+    flipped copies), so a full four-direction pass issues two fused
+    kernel calls.  Unpaired directions fall back to single scans.
+
+    In both forms, tap logits must already be produced for the oriented
+    geometry (callers orient positions before generating taps, so taps
+    always refer to the scan geometry — see apply_gspn_attention).
+    """
+    if not isinstance(direction, str):
+        return _multi_directional_scan(x, wl, wc, wr, lam,
+                                       tuple(direction), **scan_kwargs)
     h = gspn_scan(
         _to_canonical(x, direction),
         _to_canonical(wl, direction),
@@ -111,6 +138,41 @@ def directional_scan(x, wl, wc, wr, lam, direction: str, **scan_kwargs):
         **scan_kwargs,
     )
     return _from_canonical(h, direction)
+
+
+def _multi_directional_scan(x, wl, wc, wr, lam, directions, **scan_kwargs):
+    idx = {d: i for i, d in enumerate(directions)}
+    assert len(idx) == len(directions), f"duplicate directions {directions}"
+    # per_step is the GSPN-1 emulation — by construction one dispatch per
+    # line per direction, so pair fusion is intentionally skipped.
+    fuse = scan_kwargs.get("impl", "auto") != "per_step"
+
+    out = [None] * len(directions)
+    fused = set()
+    if fuse:
+        for fwd_d, rev_d in OPPOSITE_PAIRS:
+            if fwd_d not in idx or rev_d not in idx:
+                continue
+            i, j = idx[fwd_d], idx[rev_d]
+            if fwd_d == "lr":      # horizontal: ONE transpose at dispatch
+                ori = lambda a: jnp.swapaxes(a, -1, -2)
+            else:                  # vertical: already canonical
+                ori = lambda a: a
+            h2 = gspn_scan_pair(
+                ori(x),
+                jnp.stack([ori(wl[i]), ori(wl[j])]),
+                jnp.stack([ori(wc[i]), ori(wc[j])]),
+                jnp.stack([ori(wr[i]), ori(wr[j])]),
+                jnp.stack([ori(lam[i]), ori(lam[j])]),
+                **scan_kwargs,
+            )
+            out[i], out[j] = ori(h2[0]), ori(h2[1])
+            fused.update((fwd_d, rev_d))
+    for d, i in idx.items():
+        if d not in fused:
+            out[i] = directional_scan(x, wl[i], wc[i], wr[i], lam[i], d,
+                                      **scan_kwargs)
+    return jnp.stack(out)
 
 
 # ---------------------------------------------------------------------------
@@ -150,10 +212,29 @@ def init_gspn_attention(key, cfg: GSPNAttentionConfig):
     }
 
 
+def _normalize_taps_oriented(logits, direction: str, mode: str):
+    """Row-stochastic taps for ``direction`` from logits (..., H, W, 3),
+    returned in the ORIGINAL (H, W) orientation.
+
+    Boundary masking must refer to the scan geometry, so horizontal
+    directions normalise in transposed space; the flip component of
+    'bt'/'rl' acts along the scan axis, commutes with the (scan-axis
+    independent) masking and needs no data movement.
+    """
+    if direction in ("lr", "rl"):
+        wl, wc, wr = normalize_taps(jnp.swapaxes(logits, -3, -2), mode)
+        return tuple(jnp.swapaxes(a, -1, -2) for a in (wl, wc, wr))
+    return normalize_taps(logits, mode)
+
+
 def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig):
-    """x: (B, H, W, C) -> (B, H, W, C)."""
+    """x: (B, H, W, C) -> (B, H, W, C).
+
+    All directional passes run through ONE batched ``directional_scan``
+    call: opposite pairs are fused per kernel launch, so the default
+    four-direction pass dispatches two fused scans (DESIGN.md §2).
+    """
     b, h, w, c = x.shape
-    nd = len(cfg.directions)
     cp = cfg.proxy_dim
     xf = x.astype(jnp.float32)
 
@@ -168,33 +249,31 @@ def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig):
         return jnp.moveaxis(a_bhwc, -1, 1).reshape(b * ch, h, w)
 
     x_scan = to_scan(x_p, cp)
-    out = jnp.zeros((b, h, w, cp), jnp.float32)
+    wls, wcs, wrs, lams = [], [], [], []
     for d_idx, direction in enumerate(cfg.directions):
         if cfg.channel_shared:
             tap_d = taps[..., 3 * d_idx:3 * (d_idx + 1)]   # (B,H,W,3)
-            # Orient positions first so taps refer to scan-local geometry.
-            tap_d = _to_canonical(jnp.moveaxis(tap_d, -1, 1), direction)
-            tap_d = jnp.moveaxis(tap_d, 1, -1)             # (B,H',W',3)
-            wl, wc_, wr = normalize_taps(tap_d, cfg.norm_mode)
         else:
-            sl = taps[..., 3 * cp * d_idx:3 * cp * (d_idx + 1)]
-            sl = sl.reshape(b, h, w, cp, 3)
-            sl = jnp.moveaxis(sl, 3, 1).reshape(b * cp, h, w, 3)
-            sl = _to_canonical(jnp.moveaxis(sl, -1, 1), direction)
-            sl = jnp.moveaxis(sl, 1, -1)
-            wl, wc_, wr = normalize_taps(sl, cfg.norm_mode)
+            tap_d = taps[..., 3 * cp * d_idx:3 * cp * (d_idx + 1)]
+            tap_d = tap_d.reshape(b, h, w, cp, 3)
+            tap_d = jnp.moveaxis(tap_d, 3, 1).reshape(b * cp, h, w, 3)
+        wl, wc_, wr = _normalize_taps_oriented(tap_d, direction,
+                                               cfg.norm_mode)
+        wls.append(wl)
+        wcs.append(wc_)
+        wrs.append(wr)
+        lams.append(to_scan(lam[..., cp * d_idx:cp * (d_idx + 1)], cp))
 
-        lam_d = to_scan(lam[..., cp * d_idx:cp * (d_idx + 1)], cp)
-        h_d = gspn_scan(
-            _to_canonical(x_scan, direction),
-            wl, wc_, wr,
-            _to_canonical(lam_d, direction),
-            chunk=cfg.chunk, impl=cfg.impl,
-        )
-        h_d = _from_canonical(h_d, direction)
-        h_d = jnp.moveaxis(h_d.reshape(b, cp, h, w), 1, -1)  # (B,H,W,Cp)
-        u_d = u[..., cp * d_idx:cp * (d_idx + 1)]
-        out = out + u_d * h_d
+    h_all = directional_scan(
+        x_scan, jnp.stack(wls), jnp.stack(wcs), jnp.stack(wrs),
+        jnp.stack(lams), cfg.directions,
+        chunk=cfg.chunk, impl=cfg.impl,
+    )                                                      # (D, B*Cp, H, W)
+
+    out = jnp.zeros((b, h, w, cp), jnp.float32)
+    for d_idx in range(len(cfg.directions)):
+        h_d = jnp.moveaxis(h_all[d_idx].reshape(b, cp, h, w), 1, -1)
+        out = out + u[..., cp * d_idx:cp * (d_idx + 1)] * h_d
 
     y = out @ params["up"].astype(jnp.float32)
     return y.astype(x.dtype)

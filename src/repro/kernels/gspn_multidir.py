@@ -1,34 +1,62 @@
-"""Fused dual-direction GSPN scan — the TPU analogue of the paper's §4.3
-stream-based concurrency.
+"""Fused multi-direction GSPN scan — the TPU analogue of the paper's §4.3
+stream-based concurrency (DESIGN.md §2).
 
-GSPN-1 ran the four directional passes as separate kernel streams; on TPU
-we fuse opposite directions (T→B and B→T) into ONE ``pallas_call`` whose
-leading grid axis selects the direction.  The input ``x`` tile is shared
-between both directions via the BlockSpec index map — each x/λ tile
-streams from HBM once per direction pair instead of once per direction in
-the flipped copy the naive path materialises, and the sequential grid
-gives the scheduler twice the pipelineable work per launch.
+GSPN-1 ran the four directional passes as separate kernel streams; here
+opposite directions are fused into ONE ``pallas_call`` whose leading grid
+axis selects the direction:
 
-Direction handling is pure index arithmetic: for d=1 (B→T) the H tiles
-are visited in reverse (index_map) and rows within a tile iterate
-backwards (in-kernel ``r_eff``).  No flipped copies of any operand exist.
+* :func:`gspn_scan_bidir_pallas` — forward scan for one opposite pair
+  (canonical top→bottom plus its bottom→top mirror).  The input ``x`` tile
+  is shared between both directions via the BlockSpec index map — each x
+  tile streams from HBM once per direction pair instead of once per
+  direction in the flipped copy the naive path materialises, and the
+  sequential grid gives the scheduler twice the pipelineable work per
+  launch.
+* :func:`gspn_scan_bidir_bwd_pallas` — the fused adjoint of the pair:
+  direction 0's adjoint walks rows last→first, direction 1's first→last,
+  again in one launch with no flipped copies.
+* :func:`gspn_scan_quad_pallas` — all FOUR directions in a single launch
+  for square grids: ``x`` and its transpose are stacked once at the
+  dispatch boundary and the index map picks the orientation per direction
+  (``d // 2``).  Forward-only; used by the benchmark ladder to demonstrate
+  the paper's single-launch design point.
+
+A full four-direction dispatch (the L→R/R→L pair handled by one transpose
+at the dispatch boundary) therefore costs **two** launches for arbitrary
+H×W — see ``repro.core.gspn.directional_scan`` — or one for square grids.
+
+Direction handling is pure index arithmetic: for the reverse member of a
+pair the H tiles are visited in reverse (index_map) and rows within a tile
+iterate backwards (in-kernel ``r_eff``).  No flipped copies of any operand
+exist in either the forward or the adjoint pass.
 
 Layout: x (G, H, W); taps/lam stacked per direction (2, G_w, H, W) /
-(2, G, H, W).  Output (2, G, H, W): out[0] = T→B scan, out[1] = B→T scan.
+(2, G, H, W).  Output (2, G, H, W): out[0] = top→bottom scan, out[1] =
+bottom→top scan (both in the UNFLIPPED layout of x).
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.gspn_scan import (_row, _shift_left, _shift_right,
-                                     pick_row_tile)
+from repro.kernels.gspn_scan import (DEFAULT_ROW_TILE, CompilerParams, _row,
+                                     _shift_left, _shift_right)
+from repro.kernels.tuning import pick_row_tile as _pick_tile
 
+
+def _pair_row_tile(h: int, w: int, dtype_bytes: int, n_streams: int) -> int:
+    """VMEM-aware tile for the fused pair kernels (DESIGN.md §2); shares
+    the single-direction kernels' cap so fused/unfused tile identically."""
+    return _pick_tile(h, w, dtype_bytes, cap=DEFAULT_ROW_TILE,
+                      n_streams=n_streams).row_tile
+
+
+# ---------------------------------------------------------------------------
+# Forward pair kernel.
+# ---------------------------------------------------------------------------
 
 def _kernel(row_tile,
             x_ref, wl_ref, wc_ref, wr_ref, lam_ref, o_ref, carry_ref):
@@ -41,7 +69,7 @@ def _kernel(row_tile,
 
     def body(r, h_prev):
         # T->B walks rows forward; B->T walks them backward.
-        r_eff = jnp.where(d == 0, r, row_tile - 1 - r)
+        r_eff = jnp.where(d % 2 == 0, r, row_tile - 1 - r)
         h_new = (
             _row(wl_ref, r_eff) * _shift_right(h_prev)
             + _row(wc_ref, r_eff) * h_prev
@@ -61,7 +89,7 @@ def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
     lam2: (2, G, H, W).  Returns (2, G, H, W) — both directional scans."""
     g, h, w = x.shape
     cpw = channels_per_weight
-    row_tile = row_tile or pick_row_tile(h)
+    row_tile = row_tile or _pair_row_tile(h, w, x.dtype.itemsize, 6)
     assert h % row_tile == 0
     n_tiles = h // row_tile
 
@@ -90,7 +118,148 @@ def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((2, g, h, w), x.dtype),
         scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",) * 3),
         interpret=interpret,
     )(x, taps["wl"], taps["wc"], taps["wr"], lam2)
+
+
+# ---------------------------------------------------------------------------
+# Adjoint pair kernel.
+#
+# The adjoint of the top→bottom scan walks rows from LAST to FIRST; the
+# adjoint of the bottom→top scan walks FIRST to LAST — so the fused adjoint
+# is the forward pair kernel's traversal with the direction roles swapped.
+# The carry holds the three tap*adjoint products of the previously
+# processed row:
+#     d=0:  g[i] = dy[i] + shift_left(wl[i+1]*g[i+1]) + wc[i+1]*g[i+1]
+#                        + shift_right(wr[i+1]*g[i+1])
+#     d=1:  same with i+1 -> i-1.
+# ---------------------------------------------------------------------------
+
+def _bwd_pair_kernel(row_tile,
+                     dy_ref, wl_ref, wc_ref, wr_ref, g_ref, carry_ref):
+    d = pl.program_id(0)
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    def body(r, _):
+        # Adjoint traversal is opposite to the forward one per direction.
+        r_eff = jnp.where(d == 0, row_tile - 1 - r, r)
+        g_row = (
+            _row(dy_ref, r_eff)
+            + _shift_left(carry_ref[0, :, :])
+            + carry_ref[1, :, :]
+            + _shift_right(carry_ref[2, :, :])
+        )
+        g_ref[0, pl.dslice(r_eff, 1), :] = g_row.astype(g_ref.dtype)
+        carry_ref[0, :, :] = _row(wl_ref, r_eff) * g_row
+        carry_ref[1, :, :] = _row(wc_ref, r_eff) * g_row
+        carry_ref[2, :, :] = _row(wr_ref, r_eff) * g_row
+        return 0
+
+    jax.lax.fori_loop(0, row_tile, body, 0)
+
+
+def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
+                               channels_per_weight: int = 1,
+                               row_tile: int | None = None,
+                               interpret: bool = True):
+    """Fused adjoint of the pair scan.  dy2: (2, G, H, W); w*2:
+    (2, G_w, H, W), all in the UNFLIPPED layout.  Returns g2 = dL/dh
+    (pre-output-layer) as (2, G, H, W) f32 — one launch, no flipped
+    copies."""
+    _, g_dim, h, w = dy2.shape
+    cpw = channels_per_weight
+    row_tile = row_tile or _pair_row_tile(h, w, 4, 5)
+    assert h % row_tile == 0
+    n_tiles = h // row_tile
+
+    def ti_eff(d, ti):
+        # Opposite tile order to the forward pass, per direction.
+        return jnp.where(d == 0, n_tiles - 1 - ti, ti)
+
+    wt_spec = pl.BlockSpec((1, 1, row_tile, w),
+                           lambda d, gi, ti: (d, gi // cpw, ti_eff(d, ti), 0))
+    data_spec = pl.BlockSpec((1, 1, row_tile, w),
+                             lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+
+    def kernel(dy_ref, wl_ref, wc_ref, wr_ref, g_ref, carry_ref):
+        _bwd_pair_kernel(row_tile, dy_ref.at[0],
+                         wl_ref.at[0], wc_ref.at[0], wr_ref.at[0],
+                         g_ref.at[0], carry_ref)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(2, g_dim, n_tiles),
+        in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
+        out_specs=data_spec,
+        out_shape=jax.ShapeDtypeStruct((2, g_dim, h, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((3, 1, w), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",) * 3),
+        interpret=interpret,
+    )(dy2, wl2, wc2, wr2)
+
+
+# ---------------------------------------------------------------------------
+# Single-launch quad kernel (square grids).
+# ---------------------------------------------------------------------------
+
+def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
+                          row_tile: int | None = None,
+                          interpret: bool = True):
+    """All four directions in ONE ``pallas_call`` (square H == W only).
+
+    x: (G, N, N).  taps4: dict wl/wc/wr each (4, G_w, N, N); lam4:
+    (4, G, N, N) — directions ordered (tb, bt, lr, rl) with the lr/rl
+    entries already in TRANSPOSED geometry (rows of entry 2/3 are the
+    original columns).  ``x`` and its transpose are stacked once here; the
+    index map then selects the orientation per direction (``d // 2``), so
+    each grid step streams exactly one x tile — the paper's single-launch
+    design point with no flipped copies.
+
+    Returns (4, G, N, N): entries 0/1 in original orientation, entries 2/3
+    transposed (callers undo the transpose at the dispatch boundary).
+    Forward-only — training uses the pair dispatch (ops.gspn_scan_pair).
+    """
+    g, h, w = x.shape
+    assert h == w, "quad single-launch dispatch requires a square grid"
+    cpw = channels_per_weight
+    row_tile = row_tile or _pair_row_tile(h, w, x.dtype.itemsize, 6)
+    assert h % row_tile == 0
+    n_tiles = h // row_tile
+
+    xx = jnp.stack([x, jnp.swapaxes(x, -1, -2)])        # (2, G, N, N)
+
+    def ti_eff(d, ti):
+        return jnp.where(d % 2 == 0, ti, n_tiles - 1 - ti)
+
+    xx_spec = pl.BlockSpec((1, 1, row_tile, w),
+                           lambda d, gi, ti: (d // 2, gi, ti_eff(d, ti), 0))
+    wt_spec = pl.BlockSpec((1, 1, row_tile, w),
+                           lambda d, gi, ti: (d, gi // cpw, ti_eff(d, ti), 0))
+    lam_spec = pl.BlockSpec((1, 1, row_tile, w),
+                            lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+    out_spec = pl.BlockSpec((1, 1, row_tile, w),
+                            lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+
+    def kernel(x_ref, wl_ref, wc_ref, wr_ref, lam_ref, o_ref, carry_ref):
+        _kernel(row_tile, x_ref.at[0],
+                wl_ref.at[0], wc_ref.at[0], wr_ref.at[0], lam_ref.at[0],
+                o_ref.at[0], carry_ref)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(4, g, n_tiles),
+        in_specs=[xx_spec, wt_spec, wt_spec, wt_spec, lam_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((4, g, h, w), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",) * 3),
+        interpret=interpret,
+    )(xx, taps4["wl"], taps4["wc"], taps4["wr"], lam4)

@@ -32,15 +32,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tuning
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x; accept
+# either so the kernels run on the container's pinned jax.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 DEFAULT_ROW_TILE = 256
 
 
-def pick_row_tile(h: int, cap: int = DEFAULT_ROW_TILE) -> int:
-    """Largest power-of-two divisor of ``h`` not exceeding ``cap``."""
-    t = 1
-    while t * 2 <= cap and h % (t * 2) == 0:
-        t *= 2
-    return t
+def pick_row_tile(h: int, cap: int = DEFAULT_ROW_TILE, *, w: int = 128,
+                  dtype_bytes: int = 4, n_streams: int = 6) -> int:
+    """Row-tile choice for the fused scan kernels.
+
+    Thin wrapper (old signature preserved) over the single VMEM-aware
+    implementation in :func:`repro.kernels.tuning.pick_row_tile`: largest
+    power-of-two divisor of ``h`` not exceeding ``cap`` whose streamed
+    working set fits the VMEM budget.
+    """
+    return tuning.pick_row_tile(h, w, dtype_bytes, cap=cap,
+                                n_streams=n_streams).row_tile
 
 
 def _row(ref, r):
@@ -96,7 +107,8 @@ def gspn_scan_fwd_pallas(x, wl, wc, wr, lam, *, channels_per_weight: int = 1,
     assert wl.shape[0] * cpw == g, (wl.shape, g, cpw)
     chunk = h if chunk is None else chunk
     assert h % chunk == 0, (h, chunk)
-    row_tile = row_tile or pick_row_tile(min(h, chunk))
+    row_tile = row_tile or pick_row_tile(min(h, chunk), w=w,
+                                         dtype_bytes=x.dtype.itemsize)
     assert chunk % row_tile == 0, (chunk, row_tile)
     chunk_tiles = chunk // row_tile
 
@@ -110,7 +122,7 @@ def gspn_scan_fwd_pallas(x, wl, wc, wr, lam, *, channels_per_weight: int = 1,
         out_specs=data_spec,
         out_shape=jax.ShapeDtypeStruct((g, h, w), x.dtype),
         scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,
@@ -163,7 +175,8 @@ def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, channels_per_weight: int = 1,
     cpw = channels_per_weight
     chunk = h if chunk is None else chunk
     assert h % chunk == 0, (h, chunk)
-    row_tile = row_tile or pick_row_tile(min(h, chunk))
+    row_tile = row_tile or pick_row_tile(min(h, chunk), w=w,
+                                         dtype_bytes=4, n_streams=5)
     chunk_tiles = chunk // row_tile
 
     dy_f = jnp.flip(dy, axis=1)
@@ -181,7 +194,7 @@ def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, channels_per_weight: int = 1,
         out_specs=data_spec,
         out_shape=jax.ShapeDtypeStruct((g_dim, h, w), jnp.float32),
         scratch_shapes=[pltpu.VMEM((3, 1, w), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,19 +1,30 @@
 """Jit-friendly public ops for the GSPN-2 line scan.
 
-``gspn_scan`` is the single entry point used by ``repro.core.gspn``.  It is
-a ``custom_vjp`` primitive-like function with a hand-derived adjoint scan
-(DESIGN.md §2), selectable between:
+Two ``custom_vjp`` primitive-like entry points with hand-derived adjoint
+scans (DESIGN.md §2) are used by ``repro.core.gspn``:
+
+* ``gspn_scan``      — one directional line scan (G, H, W) -> (G, H, W);
+* ``gspn_scan_pair`` — one OPPOSITE-DIRECTION PAIR in a single fused
+  launch: the canonical top→bottom scan and its bottom→top mirror share
+  every ``x`` tile, so a full four-direction GSPN pass costs two launches
+  instead of four (see ``repro.core.gspn.directional_scan``).
+
+The impl matrix (both entry points):
 
 * ``impl="pallas"``  — the fused Pallas TPU kernel (``interpret=True`` on
   CPU for validation; compiled Mosaic on real TPUs);
-* ``impl="xla"``     — a single ``lax.scan`` (the fused-scan analogue at the
-  XLA level; used for the multi-pod dry-run where Pallas cannot lower on
-  the CPU backend);
+* ``impl="multidir"``— the fused opposite-pair Pallas kernel
+  (``kernels/gspn_multidir.py``); for the single-direction ``gspn_scan``
+  this degenerates to ``pallas`` (same kernel family, one direction);
+* ``impl="xla"``     — a single ``lax.scan`` per direction (the fused-scan
+  analogue at the XLA level; used for the multi-pod dry-run where Pallas
+  cannot lower on the CPU backend);
 * ``impl="per_step"``— the GSPN-1 emulation (benchmarks only; forward-only).
-* ``impl="auto"``    — pallas on TPU, xla elsewhere.
+* ``impl="auto"``    — pallas/multidir on TPU, xla elsewhere.
 
 Layout: ``x, lam: (G, H, W)``; ``wl, wc, wr: (G_w, H, W)`` with
 ``G_w ∈ {G, G // channels_per_weight}`` (channel-shared compact mode).
+Pair-op operands carry a leading direction axis of size 2.
 """
 
 from __future__ import annotations
@@ -24,13 +35,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import gspn_multidir as _mk
 from repro.kernels import gspn_scan as _pk
 from repro.kernels import ref as _ref
 
 
 @dataclasses.dataclass(frozen=True)
 class ScanConfig:
-    impl: str = "auto"
+    impl: str = "auto"           # auto | pallas | multidir | xla | per_step
     channels_per_weight: int = 1
     row_tile: int | None = None
     interpret: bool = True
@@ -39,6 +51,21 @@ class ScanConfig:
 def _resolve_impl(impl: str) -> str:
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "multidir":
+        # The pair kernel family; a single-direction scan through it is
+        # just the pallas path.
+        return "pallas"
+    return impl
+
+
+def _resolve_pair_impl(impl: str) -> str:
+    if impl == "auto":
+        return "multidir" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        return "multidir"
+    if impl not in ("multidir", "xla"):
+        raise ValueError(
+            f"impl {impl!r} not supported for the fused pair scan")
     return impl
 
 
@@ -56,8 +83,13 @@ def _fwd_dispatch(cfg: ScanConfig, x, wl, wc, wr, lam):
     raise ValueError(f"unknown impl {impl!r}")
 
 
-def _bwd_adjoint_xla(dy, wl_b, wc_b, wr_b):
-    """Adjoint scan via lax.scan; weights pre-broadcast to full G. f32 out."""
+def _bwd_adjoint_xla(dy, wl_b, wc_b, wr_b, reverse: bool = True):
+    """Adjoint scan via lax.scan; weights pre-broadcast to full G. f32 out.
+
+    ``reverse=True`` is the adjoint of the top→bottom forward scan (walks
+    rows last→first); ``reverse=False`` is the adjoint of the bottom→top
+    forward scan (walks rows first→last).
+    """
     zeros = jnp.zeros_like(dy[:, 0], dtype=jnp.float32)
 
     def body(prods, row):
@@ -70,7 +102,7 @@ def _bwd_adjoint_xla(dy, wl_b, wc_b, wr_b):
         return (wf[0] * g_r, wf[1] * g_r, wf[2] * g_r), g_r
 
     xs = tuple(jnp.moveaxis(a, 1, 0) for a in (dy, wl_b, wc_b, wr_b))
-    _, gs = jax.lax.scan(body, (zeros, zeros, zeros), xs, reverse=True)
+    _, gs = jax.lax.scan(body, (zeros, zeros, zeros), xs, reverse=reverse)
     return jnp.moveaxis(gs, 0, 1)
 
 
@@ -156,3 +188,125 @@ def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
     cfg = ScanConfig(impl=impl, channels_per_weight=cpw,
                      row_tile=row_tile, interpret=interpret)
     return _gspn_core(cfg, x, wl, wc, wr, lam)
+
+
+# ---------------------------------------------------------------------------
+# Fused opposite-direction pair scan (DESIGN.md §2).
+#
+# Semantics per pair entry (both in the UNFLIPPED layout of x):
+#   out[0][i] = wl[0,i]*h[i-1,j-1] + wc[0,i]*h[i-1,j] + wr[0,i]*h[i-1,j+1]
+#               + lam[0,i]*x[i]            (top→bottom)
+#   out[1][i] = same recurrence with i-1 -> i+1   (bottom→top)
+# ---------------------------------------------------------------------------
+
+def _pair_fwd_dispatch(cfg: ScanConfig, x, wl2, wc2, wr2, lam2):
+    impl = _resolve_pair_impl(cfg.impl)
+    if impl == "multidir":
+        return _mk.gspn_scan_bidir_pallas(
+            x, {"wl": wl2, "wc": wc2, "wr": wr2}, lam2,
+            channels_per_weight=cfg.channels_per_weight,
+            row_tile=cfg.row_tile, interpret=cfg.interpret)
+    fwd = _ref.gspn_scan_ref(x, wl2[0], wc2[0], wr2[0], lam2[0])
+    rev = _ref.gspn_scan_ref(x, wl2[1], wc2[1], wr2[1], lam2[1],
+                             reverse=True)
+    return jnp.stack([fwd, rev])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gspn_pair_core(cfg: ScanConfig, x, wl2, wc2, wr2, lam2):
+    return _pair_fwd_dispatch(cfg, x, wl2, wc2, wr2, lam2)
+
+
+def _gspn_pair_fwd(cfg, x, wl2, wc2, wr2, lam2):
+    h2 = _pair_fwd_dispatch(cfg, x, wl2, wc2, wr2, lam2)
+    return h2, (x, wl2, wc2, wr2, lam2, h2)
+
+
+def _gspn_pair_bwd(cfg, res, dy2):
+    x, wl2, wc2, wr2, lam2, h2 = res
+    g_dim = x.shape[0]
+    cpw = cfg.channels_per_weight
+    impl = _resolve_pair_impl(cfg.impl)
+
+    if impl == "multidir":
+        g2 = _mk.gspn_scan_bidir_bwd_pallas(
+            dy2, wl2, wc2, wr2, channels_per_weight=cpw,
+            row_tile=cfg.row_tile, interpret=cfg.interpret)
+    else:
+        gs = []
+        for d, reverse in ((0, True), (1, False)):
+            wl_b = _ref._broadcast_w(wl2[d], g_dim)
+            wc_b = _ref._broadcast_w(wc2[d], g_dim)
+            wr_b = _ref._broadcast_w(wr2[d], g_dim)
+            gs.append(_bwd_adjoint_xla(dy2[d], wl_b, wc_b, wr_b,
+                                       reverse=reverse))
+        g2 = jnp.stack(gs)
+
+    g2 = g2.astype(jnp.float32)
+    h32 = h2.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    # Previous-row state per direction: d=0 reads row i-1, d=1 reads i+1.
+    h_prev = jnp.stack([
+        jnp.concatenate([jnp.zeros_like(h32[0, :, :1]), h32[0, :, :-1]],
+                        axis=1),
+        jnp.concatenate([h32[1, :, 1:], jnp.zeros_like(h32[1, :, :1])],
+                        axis=1),
+    ])
+    dx = ((lam2[0].astype(jnp.float32) * g2[0])
+          + (lam2[1].astype(jnp.float32) * g2[1])).astype(x.dtype)
+    dlam2 = (x32[None] * g2).astype(lam2.dtype)
+    dwl2 = g2 * _ref._shift_right(h_prev)
+    dwc2 = g2 * h_prev
+    dwr2 = g2 * _ref._shift_left(h_prev)
+    if cpw > 1:
+        gw = g_dim // cpw
+        shp = (2, gw, cpw) + dwl2.shape[2:]
+        dwl2 = dwl2.reshape(shp).sum(axis=2)
+        dwc2 = dwc2.reshape(shp).sum(axis=2)
+        dwr2 = dwr2.reshape(shp).sum(axis=2)
+    return (dx, dwl2.astype(wl2.dtype), dwc2.astype(wc2.dtype),
+            dwr2.astype(wr2.dtype), dlam2)
+
+
+_gspn_pair_core.defvjp(_gspn_pair_fwd, _gspn_pair_bwd)
+
+
+def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, chunk: int | None = None,
+                   impl: str = "auto", row_tile: int | None = None,
+                   interpret: bool = True):
+    """Fused opposite-direction pair scan with optional GSPN-local chunking.
+
+    x: (G, H, W) — SHARED by both directions; wl2/wc2/wr2: (2, G_w, H, W)
+    with G_w dividing G; lam2: (2, G, H, W).  Entry 0 scans top→bottom over
+    axis -2, entry 1 bottom→top; all operands and outputs stay in the
+    UNFLIPPED layout of x (the reverse traversal is index arithmetic inside
+    the kernel, never a flipped copy).  Returns (2, G, H, W) in x.dtype.
+    Differentiable in all tensor args.
+    """
+    g, h, w = x.shape
+    gw = wl2.shape[1]
+    assert g % gw == 0, (g, gw)
+    cpw = g // gw
+
+    if chunk is not None and chunk != h:
+        assert h % chunk == 0, (h, chunk)
+        n = h // chunk
+        wl_b = jnp.stack([_ref._broadcast_w(wl2[d], g) for d in (0, 1)])
+        wc_b = jnp.stack([_ref._broadcast_w(wc2[d], g) for d in (0, 1)])
+        wr_b = jnp.stack([_ref._broadcast_w(wr2[d], g) for d in (0, 1)])
+
+        def fold(a):           # (G, H, W) -> (G*n, chunk, W)
+            return a.reshape(g * n, chunk, w)
+
+        def fold2(a):          # (2, G, H, W) -> (2, G*n, chunk, W)
+            return a.reshape(2, g * n, chunk, w)
+
+        cfg = ScanConfig(impl=impl, channels_per_weight=1,
+                         row_tile=row_tile, interpret=interpret)
+        out = _gspn_pair_core(cfg, fold(x), fold2(wl_b), fold2(wc_b),
+                              fold2(wr_b), fold2(lam2))
+        return out.reshape(2, g, h, w)
+
+    cfg = ScanConfig(impl=impl, channels_per_weight=cpw,
+                     row_tile=row_tile, interpret=interpret)
+    return _gspn_pair_core(cfg, x, wl2, wc2, wr2, lam2)

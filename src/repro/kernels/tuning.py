@@ -1,6 +1,9 @@
 """VMEM-aware tile selection — the TPU analogue of the paper's §4.3
 occupancy balancing (block size vs shared-memory footprint vs resident
-blocks).
+blocks).  This is the SINGLE row-tile picker: every scan kernel
+(``gspn_scan.py``, ``gspn_multidir.py``) routes through
+:func:`pick_row_tile`; ``gspn_scan.pick_row_tile`` survives only as a
+thin wrapper over it for the old call signature.
 
 The fused scan keeps per-grid-cell working set
 ``(x + wl + wc + wr + lam + out) tiles + carry`` resident in VMEM.  The

@@ -6,6 +6,11 @@ LPU (depthwise 3×3, per CMT) → GSPN-2 attention (channel-shared taps +
 compressive proxy, paper §4.2) → FFN, all pre-norm with residuals —
 mirroring the paper's ImageNet configuration (C_proxy = 2, LPU at block
 and FFN entry).
+
+The attention module's four directional scans run through the fused
+opposite-pair dispatch (two kernel launches per block instead of four —
+DESIGN.md §2); ``GSPNVisionConfig.impl`` selects the kernel path
+(``auto``/``pallas``/``multidir``/``xla``, see ``repro.kernels.ops``).
 """
 
 from __future__ import annotations

@@ -6,6 +6,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "kernels: interpret-mode Pallas kernel validation "
+        "(cheap PR gate: pytest -m kernels)")
+
+
 @pytest.fixture(scope="session", autouse=True)
 def _single_device_guard():
     assert len(jax.devices()) == 1, (

@@ -12,6 +12,8 @@ from repro.kernels.gspn_multidir import gspn_scan_bidir_pallas
 from repro.kernels.tuning import (VMEM_BYTES, pick_row_tile,
                                   scan_working_set)
 
+pytestmark = pytest.mark.kernels
+
 
 @pytest.mark.parametrize("shape,cpw", [((4, 16, 24), 2), ((2, 8, 128), 1),
                                        ((6, 32, 16), 3)])

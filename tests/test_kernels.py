@@ -11,6 +11,8 @@ from repro.core import gspn as G
 from repro.kernels import ref as R
 from repro.kernels.ops import gspn_scan
 
+pytestmark = pytest.mark.kernels
+
 SHAPES = [
     (1, 4, 8),
     (2, 16, 24),
