@@ -15,6 +15,7 @@ import traceback
 MODULES = [
     ("fig3", "benchmarks.fig3_kernel_ladder"),
     ("multidir", "benchmarks.multidir_ladder"),
+    ("sp", "benchmarks.sp_scaling"),
     ("table1", "benchmarks.table1_throughput"),
     ("fig4", "benchmarks.fig4_scaling"),
     ("table2", "benchmarks.table2_imagenet"),

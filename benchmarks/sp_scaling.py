@@ -1,0 +1,109 @@
+"""Spatial-sequence-parallel scaling ladder (DESIGN.md §8).
+
+Ladder over 1/2/4/8 simulated devices × grid sizes, reporting per-scan
+step time and the analytic collective traffic: the sp scan exchanges one
+boundary column (plus, for the all-gather strategy, the compact (W, W)
+transfer operator) instead of any full activation — the ``ratio`` column
+is collective bytes over the bytes a naive activation gather would move.
+
+Device counts are forced with ``--xla_force_host_platform_device_count``,
+which must be set BEFORE jax imports, so each rung runs in a child
+interpreter (``python -m benchmarks.sp_scaling --devices N``); the parent
+``run()`` re-emits the children's CSV rows.  CPU timings are indicative
+only (like fig3, the ladder is reproduced structurally); the traffic
+model is exact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+DEVICES = (1, 2, 4, 8)
+GRIDS = [(2, 2, 256, 256), (2, 2, 512, 512)]    # (B, C_proxy, H, W)
+SMOKE_DEVICES = (1, 2)
+SMOKE_GRIDS = [(1, 2, 64, 64)]
+
+
+def _strategy_for(n_dev: int) -> str:
+    return "ppermute" if n_dev <= 4 else "allgather"
+
+
+def collective_bytes(n_dev: int, b: int, g: int, w: int,
+                     strategy: str) -> int:
+    """Exact per-scan exchange traffic (f32): boundary columns for the
+    ppermute chain; (T, b) pairs for the all-gather composition."""
+    if n_dev == 1:
+        return 0
+    if strategy == "ppermute":
+        return (n_dev - 1) * g * w * 4
+    return n_dev * (b * w * w + g * w) * 4      # G_w = b (compact taps)
+
+
+def _child(n_dev: int, smoke: bool) -> None:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_dev} "
+        + os.environ.get("XLA_FLAGS", ""))
+    import jax
+
+    import benchmarks.common as common
+    common.SMOKE = smoke
+    from benchmarks.common import emit, time_fn, make_gspn_inputs
+    from repro.launch.mesh import make_sp_mesh
+    from repro.parallel.gspn_sp import gspn_scan_sp
+
+    mesh = make_sp_mesh(n_dev) if n_dev > 1 else None
+    strategy = _strategy_for(n_dev)
+    for b, cp, h, w in (SMOKE_GRIDS if smoke else GRIDS):
+        x, wl, wc, wr, lam = make_gspn_inputs(b, cp, h, w)
+        g = b * cp
+        fn = jax.jit(lambda *a: gspn_scan_sp(
+            *a, mesh=mesh, strategy=strategy))
+        t = time_fn(fn, x, wl, wc, wr, lam)
+        coll = collective_bytes(n_dev, b, g, w, strategy)
+        act = g * h * w * 4
+        emit(f"sp_scaling/dev{n_dev}_h{h}w{w}_us", t * 1e6,
+             f"strategy={strategy if n_dev > 1 else 'local'};"
+             f"collective_bytes={coll};activation_bytes={act};"
+             f"ratio={coll / act:.5f}")
+
+
+def run() -> None:
+    import benchmarks.common as common
+
+    devices = SMOKE_DEVICES if common.SMOKE else DEVICES
+    for n_dev in devices:
+        cmd = [sys.executable, "-m", "benchmarks.sp_scaling",
+               "--devices", str(n_dev)]
+        if common.SMOKE:
+            cmd.append("--smoke")
+        r = subprocess.run(cmd, capture_output=True, text=True, timeout=900)
+        if r.returncode != 0:
+            raise RuntimeError(
+                f"sp_scaling child (devices={n_dev}) failed:\n{r.stderr}")
+        for line in r.stdout.splitlines():
+            if line.startswith("sp_scaling/"):
+                common.ROWS.append(line)
+                print(line, flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=0,
+                    help="child mode: run the rung for this device count")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.devices:
+        _child(args.devices, args.smoke)
+    else:
+        if args.smoke:
+            import benchmarks.common as common
+            common.SMOKE = True
+        print("name,us_per_call,derived")
+        run()
+
+
+if __name__ == "__main__":
+    main()

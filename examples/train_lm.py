@@ -55,8 +55,8 @@ def main():
     print(f"model: {cfg.name}  params={n/1e6:.1f}M  "
           f"mixer={args.mixer}  device={jax.devices()[0].platform}")
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     trainer = Trainer(
         cfg,
         AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),

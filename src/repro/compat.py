@@ -1,0 +1,63 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+The production target is current jax (``jax.shard_map``, mesh axis types,
+``jax.set_mesh``); CI containers may pin older releases (0.4.x) where the
+same functionality lives under different names.  Everything
+parallelism-related in this repo goes through these four helpers so the
+kernels and collectives run unchanged on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5: explicit/auto axis types on meshes
+    _AXIS_TYPE = jax.sharding.AxisType
+except AttributeError:  # 0.4.x: meshes are untyped (all-auto)
+    _AXIS_TYPE = None
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with all-Auto axis types where the API has them."""
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(
+            axis_shapes, axis_names, devices=devices,
+            axis_types=(_AXIS_TYPE.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Unchecked-replication shard_map on both current and 0.4.x jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` on current jax; on 0.4.x the legacy ``Mesh`` object is
+    itself the context manager (NamedSharding-based code carries its mesh
+    explicitly there, so the context is only needed for API parity).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def ambient_mesh():
+    """The mesh installed by :func:`set_mesh`, or None when unset."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        return None if m.empty else m
+    except AttributeError:
+        pass
+    try:  # 0.4.x legacy global mesh context
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # noqa: BLE001
+        return None

@@ -144,8 +144,12 @@ def _multi_directional_scan(x, wl, wc, wr, lam, directions, **scan_kwargs):
     idx = {d: i for i, d in enumerate(directions)}
     assert len(idx) == len(directions), f"duplicate directions {directions}"
     # per_step is the GSPN-1 emulation — by construction one dispatch per
-    # line per direction, so pair fusion is intentionally skipped.
-    fuse = scan_kwargs.get("impl", "auto") != "per_step"
+    # line per direction, so pair fusion is intentionally skipped.  The
+    # spatially-sharded path ("sp") also runs per direction: each oriented
+    # scan owns its own boundary exchange over the seq mesh axis, and the
+    # opposite member of a pair scans the other way through the same
+    # blocks, so there is no shared launch to fuse (DESIGN.md §8).
+    fuse = scan_kwargs.get("impl", "auto") not in ("per_step", "sp")
 
     out = [None] * len(directions)
     fused = set()
@@ -188,6 +192,8 @@ class GSPNAttentionConfig:
     chunk: int | None = None       # GSPN-local segment length (rows)
     norm_mode: str = "softmax"
     impl: str = "auto"             # kernel selection, see kernels.ops
+    seq_axis: str = "seq"          # mesh axis for impl="sp" (DESIGN.md §8)
+    sp_strategy: str = "auto"      # boundary-exchange strategy for impl="sp"
     param_dtype: jnp.dtype = jnp.float32
 
 
@@ -227,12 +233,14 @@ def _normalize_taps_oriented(logits, direction: str, mode: str):
     return normalize_taps(logits, mode)
 
 
-def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig):
+def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig, *, mesh=None):
     """x: (B, H, W, C) -> (B, H, W, C).
 
     All directional passes run through ONE batched ``directional_scan``
     call: opposite pairs are fused per kernel launch, so the default
     four-direction pass dispatches two fused scans (DESIGN.md §2).
+    ``mesh`` is only consulted by ``impl="sp"``, which shards each
+    direction's scan dimension over ``cfg.seq_axis`` (DESIGN.md §8).
     """
     b, h, w, c = x.shape
     cp = cfg.proxy_dim
@@ -268,6 +276,7 @@ def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig):
         x_scan, jnp.stack(wls), jnp.stack(wcs), jnp.stack(wrs),
         jnp.stack(lams), cfg.directions,
         chunk=cfg.chunk, impl=cfg.impl,
+        mesh=mesh, seq_axis=cfg.seq_axis, sp_strategy=cfg.sp_strategy,
     )                                                      # (D, B*Cp, H, W)
 
     out = jnp.zeros((b, h, w, cp), jnp.float32)
@@ -299,6 +308,8 @@ class GSPNSeqConfig:
     channel_shared: bool = True
     norm_mode: str = "softmax"
     impl: str = "auto"
+    seq_axis: str = "seq"          # mesh axis for impl="sp" (DESIGN.md §8)
+    sp_strategy: str = "auto"
     param_dtype: jnp.dtype = jnp.float32
 
 
@@ -322,7 +333,7 @@ def _fold_len(l: int, row_width: int) -> tuple[int, int]:
 
 
 def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
-                         return_cache: bool = False):
+                         return_cache: bool = False, *, mesh=None):
     """Causal sub-quadratic token mixer.  x: (B, L, D) -> (B, L, D).
 
     Fold the sequence row-major into (H, W); causality holds because:
@@ -331,6 +342,10 @@ def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
 
     ``return_cache=True`` additionally returns the O(W) decode cache
     (previous grid row + within-row state) for streaming generation.
+    With ``impl="sp"`` and a mesh carrying ``cfg.seq_axis``, both folded
+    passes shard their scan dimension across devices (DESIGN.md §8) —
+    grid rows for the T→B pass, grid columns for the within-row pass —
+    which is what lets folded sequences outgrow one chip's memory.
     """
     b, l, d = x.shape
     cp = cfg.proxy_dim
@@ -354,12 +369,15 @@ def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
         a = jnp.moveaxis(a.reshape(b, k, h, w), 1, -1)
         return a.reshape(b, h * w, k)[:, :l]
 
+    scan_kwargs = dict(impl=cfg.impl, mesh=mesh, seq_axis=cfg.seq_axis,
+                       sp_strategy=cfg.sp_strategy)
+
     # Pass 1: causal T->B 2D scan in proxy space, channel-shared taps.
     wl, wc_, wr = normalize_taps(fold(taps).reshape(b * 3, h, w)
                                  .reshape(b, 3, h, w).transpose(0, 2, 3, 1),
                                  cfg.norm_mode)
     h_tb = gspn_scan(fold(x_p), wl, wc_, wr,
-                     fold(lam[..., :cp]), impl=cfg.impl)
+                     fold(lam[..., :cp]), **scan_kwargs)
 
     # Pass 2: causal within-row scan — center-tap-only recurrence along W,
     # realised as an 'lr'-oriented scan with chunk=1 row coupling removed
@@ -369,7 +387,7 @@ def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
     zeros = jnp.zeros_like(gate)
     h_row = gspn_scan(x_lr, zeros, gate, zeros,
                       _to_canonical(fold(lam[..., cp:]), "lr"),
-                      impl=cfg.impl)
+                      **scan_kwargs)
     h_row = _from_canonical(h_row, "lr")
 
     y = (unfold(h_tb, cp) * u[..., :cp] + unfold(h_row, cp) * u[..., cp:])

@@ -20,6 +20,11 @@ The impl matrix (both entry points):
   analogue at the XLA level; used for the multi-pod dry-run where Pallas
   cannot lower on the CPU backend);
 * ``impl="per_step"``— the GSPN-1 emulation (benchmarks only; forward-only).
+* ``impl="sp"``      — the spatially-sharded scan (``parallel/gspn_sp.py``,
+  DESIGN.md §8): the scan dimension is partitioned over the ``seq`` mesh
+  axis, one compact boundary exchange per scan.  Extra kwargs ``mesh`` /
+  ``seq_axis`` / ``sp_strategy`` select the mesh axis and collective
+  strategy; without a usable mesh it falls back to the single-device path.
 * ``impl="auto"``    — pallas/multidir on TPU, xla elsewhere.
 
 Layout: ``x, lam: (G, H, W)``; ``wl, wc, wr: (G_w, H, W)`` with
@@ -156,12 +161,20 @@ _gspn_core.defvjp(_gspn_core_fwd, _gspn_core_bwd)
 
 def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
               impl: str = "auto", row_tile: int | None = None,
-              interpret: bool = True):
+              interpret: bool = True, mesh=None, seq_axis: str = "seq",
+              sp_strategy: str = "auto"):
     """GSPN line scan with optional GSPN-local chunking.
 
     x, lam: (G, H, W); wl/wc/wr: (G_w, H, W), G_w divides G.
     Returns h: (G, H, W) in x.dtype.  Differentiable in all tensor args.
+    ``mesh``/``seq_axis``/``sp_strategy`` only apply to ``impl="sp"``.
     """
+    if impl == "sp":
+        from repro.parallel.gspn_sp import gspn_scan_sp
+        return gspn_scan_sp(x, wl, wc, wr, lam, mesh=mesh,
+                            axis_name=seq_axis, strategy=sp_strategy,
+                            row_tile=row_tile, interpret=interpret,
+                            chunk=chunk)
     g, h, w = x.shape
     gw = wl.shape[0]
     assert g % gw == 0, (g, gw)
@@ -273,7 +286,8 @@ _gspn_pair_core.defvjp(_gspn_pair_fwd, _gspn_pair_bwd)
 
 def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, chunk: int | None = None,
                    impl: str = "auto", row_tile: int | None = None,
-                   interpret: bool = True):
+                   interpret: bool = True, mesh=None, seq_axis: str = "seq",
+                   sp_strategy: str = "auto"):
     """Fused opposite-direction pair scan with optional GSPN-local chunking.
 
     x: (G, H, W) — SHARED by both directions; wl2/wc2/wr2: (2, G_w, H, W)

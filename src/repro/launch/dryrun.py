@@ -49,6 +49,8 @@ def run_cell(kind: str, arch: str, shape: str, mesh_mode: str, out_dir: str,
              remat: str | None = None, tag: str = "",
              grad_accum: int | None = None):
     import jax
+
+    from repro import compat
     from repro.launch.mesh import make_production_mesh, HW
     from repro.roofline import hlo as hlo_mod
 
@@ -64,7 +66,7 @@ def run_cell(kind: str, arch: str, shape: str, mesh_mode: str, out_dir: str,
     }
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             if kind == "vision":
                 from repro.launch.lowering import build_vision_cell
                 cell = build_vision_cell(arch, shape, mesh)

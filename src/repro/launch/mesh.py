@@ -3,39 +3,77 @@
 A FUNCTION, not a module-level constant — importing this module never
 touches jax device state (required for the smoke tests to keep seeing one
 CPU device).
+
+Axes (DESIGN.md §5, §8):
+
+* ``pod``   — outer data parallel over DCN (multi-pod only);
+* ``data``  — data parallel + FSDP;
+* ``seq``   — spatial sequence parallelism: the GSPN scan dimension is
+  partitioned over this axis (``parallel/gspn_sp.py``).  Carved out of
+  the data-parallel extent so the chip count per pod is unchanged;
+* ``model`` — tensor parallel.
 """
 
 from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
 
-def make_production_mesh(*, multi_pod: bool = False):
+
+def make_production_mesh(*, multi_pod: bool = False, seq_parallel: int = 1):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
 
-    Axes: ("pod", "data", "model") multi-pod / ("data", "model") single-pod.
+    Axes: ("pod",) ("data", "seq", "model") with the ``seq`` axis carved
+    out of the 16-wide data extent (``seq_parallel`` must divide 16);
+    ``seq_parallel=1`` keeps the historical ("data", "model") layout.
     """
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    data = 16
+    assert data % seq_parallel == 0, (data, seq_parallel)
+    shape: tuple = (data // seq_parallel, 16)
+    axes: tuple = ("data", "model")
+    if seq_parallel > 1:
+        shape = (data // seq_parallel, seq_parallel, 16)
+        axes = ("data", "seq", "model")
+    if multi_pod:
+        shape = (2,) + shape
+        axes = ("pod",) + axes
+    return make_mesh(shape, axes)
 
 
-def make_mesh_for_devices(devices, *, model_parallel: int = 16):
-    """Elastic helper: best (data, model) mesh for an arbitrary device set."""
+def make_mesh_for_devices(devices, *, model_parallel: int = 16,
+                          seq_parallel: int = 1):
+    """Elastic helper: best (data[, seq], model) mesh for a device set."""
     n = len(devices)
     tp = model_parallel
     while n % tp != 0:
         tp //= 2
-    return jax.make_mesh(
-        (n // tp, tp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        devices=devices)
+    dp = n // tp
+    sp = seq_parallel
+    while dp % sp != 0:
+        sp //= 2
+    if sp > 1:
+        return make_mesh((dp // sp, sp, tp), ("data", "seq", "model"),
+                         devices=devices)
+    return make_mesh((dp, tp), ("data", "model"), devices=devices)
+
+
+def make_sp_mesh(n_seq: int | None = None, *, devices=None):
+    """Single-axis ``seq`` mesh — the whole device set drives one sharded
+    scan (tests, benchmarks, and max-resolution single-image inference)."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = n_seq or len(devices)
+    return make_mesh((n,), ("seq",), devices=devices[:n])
 
 
 def dp_axes_for(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def seq_axis_size(mesh, axis: str = "seq") -> int:
+    """Extent of the sequence-parallel axis (1 when the mesh lacks it)."""
+    return mesh.shape[axis] if mesh is not None and axis in mesh.axis_names \
+        else 1
 
 
 HW = {

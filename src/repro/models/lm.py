@@ -86,6 +86,9 @@ class LMConfig:
     # GSPN mixer
     gspn_proxy_dim: int = 8
     gspn_row_width: int = 64
+    gspn_impl: str = "xla"         # "sp" shards the folded-grid scans over
+    gspn_seq_axis: str = "seq"     # the mesh's seq axis (DESIGN.md §8)
+    gspn_sp_strategy: str = "auto"
     # encoder-decoder (audio)
     encoder_layers: int = 0
     enc_len: int = 1500
@@ -179,7 +182,8 @@ def _slstm_cfg(cfg: LMConfig):
 def _gspn_cfg(cfg: LMConfig):
     return gspn_core.GSPNSeqConfig(
         dim=cfg.d_model, proxy_dim=cfg.gspn_proxy_dim,
-        row_width=cfg.gspn_row_width, impl="xla")
+        row_width=cfg.gspn_row_width, impl=cfg.gspn_impl,
+        seq_axis=cfg.gspn_seq_axis, sp_strategy=cfg.gspn_sp_strategy)
 
 
 def _norm_init(cfg: LMConfig):
@@ -374,8 +378,9 @@ def _mk_mixer_kind(name):
             x = x + xlstm_mod.apply_slstm(p["mix"], h, _slstm_cfg(cfg),
                                           cfg.policy)
         elif name == "gspn":
-            x = x + gspn_core.apply_gspn_seq_mixer(p["mix"], h,
-                                                   _gspn_cfg(cfg))
+            x = x + gspn_core.apply_gspn_seq_mixer(
+                p["mix"], h, _gspn_cfg(cfg),
+                mesh=ctx.mesh if ctx is not None else None)
             h = _norm_apply(cfg, p["ln2"], x)
             x = x + _ffn_apply(cfg, p["ffn"], h)
         return x, jnp.zeros((), jnp.float32)
@@ -435,9 +440,9 @@ def _mk_mixer_kind(name):
                                                      cfg.policy)
             return x + y, cache
         if name == "gspn":
-            y, cache = gspn_core.apply_gspn_seq_mixer(p["mix"], h,
-                                                      _gspn_cfg(cfg),
-                                                      return_cache=True)
+            y, cache = gspn_core.apply_gspn_seq_mixer(
+                p["mix"], h, _gspn_cfg(cfg), return_cache=True,
+                mesh=ctx.mesh if ctx is not None else None)
             x = x + y
             h = _norm_apply(cfg, p["ln2"], x)
             x = x + _ffn_apply(cfg, p["ffn"], h)

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.layers import DTypePolicy, DEFAULT_POLICY, dense_init
 
 
@@ -213,8 +214,7 @@ def apply_moe(params, x, cfg: MoEConfig, *, mesh=None,
             aux = jax.lax.pmean(aux, model_axis)
             return y, aux
 
-        dp = P(dp_axes)
-        y, aux = jax.shard_map(
+        y, aux = compat.shard_map(
             mapped, mesh=mesh,
             in_specs=(P(dp_axes[0] if len(dp_axes) == 1 else dp_axes,
                         None, None),
@@ -224,10 +224,8 @@ def apply_moe(params, x, cfg: MoEConfig, *, mesh=None,
                       P(model_axis, None, None, None)),
             out_specs=(P(dp_axes[0] if len(dp_axes) == 1 else dp_axes,
                          None, None), P()),
-            check_vma=False,
         )(x, params["router"], params["gate_slab"], params["up_slab"],
           params["down_slab"])
-        del dp
 
     if cfg.shared_expert_ff:
         from repro.models.layers import apply_swiglu

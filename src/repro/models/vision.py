@@ -41,7 +41,9 @@ class GSPNVisionConfig:
     mlp_ratio: float = 4.0
     channel_shared: bool = True        # GSPN-2 compact channel propagation
     chunk: int | None = None           # GSPN-local
-    impl: str = "auto"
+    impl: str = "auto"                 # "sp" shards each scan over seq_axis
+    seq_axis: str = "seq"            # mesh axis for impl="sp" (DESIGN.md §8)
+    sp_strategy: str = "auto"
     param_dtype: jnp.dtype = jnp.float32
 
     @property
@@ -68,6 +70,7 @@ def _gspn_attn_cfg(cfg: GSPNVisionConfig, dim: int):
     return gspn_core.GSPNAttentionConfig(
         dim=dim, proxy_dim=cfg.proxy_dim,
         channel_shared=cfg.channel_shared, chunk=cfg.chunk, impl=cfg.impl,
+        seq_axis=cfg.seq_axis, sp_strategy=cfg.sp_strategy,
         param_dtype=cfg.param_dtype)
 
 
@@ -104,8 +107,12 @@ def _apply_block(p, x, cfg: GSPNVisionConfig, dim: int, ctx=None):
     x = _anchor(x, ctx)
     x = x + apply_dwconv2d(p["lpu"], x)                       # LPU
     h = apply_layernorm(p["ln1"], x)
-    x = x + gspn_core.apply_gspn_attention(p["gspn"], h,
-                                           _gspn_attn_cfg(cfg, dim))
+    # impl="sp" shards every directional scan over the mesh's seq axis
+    # (one boundary-column exchange per scan, DESIGN.md §8) — the path
+    # that lets high-resolution grids exceed one device's memory.
+    x = x + gspn_core.apply_gspn_attention(
+        p["gspn"], h, _gspn_attn_cfg(cfg, dim),
+        mesh=ctx.mesh if ctx is not None else None)
     x = _anchor(x, ctx)
     x = x + apply_dwconv2d(p["lpu2"], x)                      # LPU before FFN
     h = apply_layernorm(p["ln2"], x)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def quantize_int8(x):
     """Per-tensor symmetric int8 quantisation.  Returns (q, scale)."""
@@ -39,8 +41,13 @@ def _compress_one(g, e, axis_name):
     gf = g.astype(jnp.float32) + e
     # Shared scale across shards (one scalar all-reduce) so the int32 psum
     # of payloads reconstructs the exact sum of quantised values.
-    scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
-    scale = jnp.maximum(scale, 1e-12) / 127.0
+    amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+    # All-zero gradient across every shard (frozen params, masked losses,
+    # loss-scale underflow): dividing by a denormal-floored scale amplifies
+    # by ~1e14 and a zero scale would NaN the dequantise.  Pin the scale to
+    # a safe constant instead — q, psum, and the residual are then exact
+    # zeros.
+    scale = jnp.where(amax > 0.0, amax, 1.0) / 127.0
     q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
     q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
     n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
@@ -86,11 +93,10 @@ def compressed_allreduce(mesh, axis_name: str):
             gh, ne = compressed_psum_tree(g, e, axis_name)
             return gh, jax.tree.map(lambda a: a[None], ne)
 
-        return jax.shard_map(
+        return compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(axis_name), P(axis_name)),
             out_specs=(P(), P(axis_name)),
-            check_vma=False,
         )(grads, errors)
 
     return fn

@@ -1,0 +1,410 @@
+"""Spatial sequence parallelism for the GSPN line scan (DESIGN.md §8).
+
+PR 1 fused the multi-direction dispatch, but every scan still ran on ONE
+device — the mesh axes only sharded weights, so resolution / folded
+sequence length were capped by a single chip's VMEM/HBM.  This module
+shards the scan dimension itself across a ``seq`` mesh axis, following the
+LASP/LASP-2 observation (arXiv 2404.02882, 2502.07563) that linear
+recurrences admit sequence parallelism with a SINGLE compact boundary
+exchange per scan instead of any full-activation collective.
+
+Decomposition.  The canonical recurrence (top→bottom over rows, W lanes)
+
+    h[i] = M[i] h[i-1] + lam[i]·x[i],   M[i] tridiagonal from (wl, wc, wr)
+
+is linear in the carry, so partitioning rows into K contiguous blocks
+(one per ``seq`` shard) gives, for block k with incoming boundary
+``b_k = h[first_row_k - 1]``:
+
+    h[i] = h_loc[i] + (∏_{r=first_k..i} M[r]) · b_k
+
+where ``h_loc`` is the block-local scan with zero incoming state.  Each
+device therefore computes, fully in parallel:
+
+  1. ``h_loc``  — the existing fused kernel on its local rows;
+  2. ``T_k = ∏_{r in block k} M[r]`` — the (W, W) *boundary transfer
+     operator*, one per weight group (compact mode amortises it over
+     ``channels_per_weight`` channels);
+  3. its outgoing uncorrected boundary ``bl_k`` (last local row of
+     ``h_loc``).
+
+Boundary composition is associative —
+``(T_b, b_b) ∘ (T_a, b_a) = (T_b T_a, T_b b_a + b_b)`` — so the corrected
+incoming boundaries ``b_k`` compose across blocks with ONE logical
+exchange.  Two strategies (``strategy=``):
+
+* ``"ppermute"``  — a K-1 step neighbour chain; each hop forwards one
+  boundary column (G·W floats) and folds it through the local ``T_k``
+  matvec.  Lowest traffic, latency linear in K: right for small meshes.
+* ``"allgather"`` — one log-depth all-gather of the compact ``(T_k,
+  bl_k)`` pairs; every device then folds its own prefix locally with K
+  cheap matvecs.  One collective round: right for larger meshes.
+* ``"auto"``      — ppermute for K ≤ 4, allgather beyond.
+
+A final correction pass propagates ``b_k`` homogeneously through the
+block (3 FMAs/element — same shape as the local scan, no extra HBM
+round-trip) and adds it to ``h_loc``.
+
+Backward.  ``gspn_scan_sp`` is a ``custom_vjp``: the adjoint of the scan
+is the SAME block-parallel engine run in reverse — adjoint taps are the
+next row's weights with left/right roles transposed
+(``wl~ = shift_right(wr[i+1])``, ``wc~ = wc[i+1]``,
+``wr~ = shift_left(wl[i+1])``), the boundary exchange direction flips
+(last block is first in scan order), and one extra single-row ppermute
+fetches the neighbour block's first weight row.  Parameter/input
+gradients are then purely local, using the forward incoming boundary
+(saved as a residual) as the cross-block previous row.
+
+Non-divisible scan lengths are handled by zero-padding rows at the scan
+*end* (zero taps/lam ⇒ padded rows carry exact zeros through both the
+forward and adjoint recurrences) and slicing the pad off outside the
+shard_map, so block shapes stay static and equal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.kernels import gspn_scan as _pk
+from repro.kernels import ref as _ref
+
+STRATEGIES = ("auto", "ppermute", "allgather")
+
+# auto strategy: neighbour chain while the latency term (K-1 hops) stays
+# small, one-shot all-gather of (T, b) pairs beyond.
+PPERMUTE_MAX_BLOCKS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SPConfig:
+    """Static (hashable) configuration of one sharded scan call."""
+    axis_name: str = "seq"
+    n_blocks: int = 1
+    strategy: str = "auto"
+    inner_impl: str = "xla"        # local-block forward kernel: pallas | xla
+    channels_per_weight: int = 1
+    row_tile: int | None = None
+    interpret: bool = True
+
+    def resolved_strategy(self) -> str:
+        if self.strategy != "auto":
+            return self.strategy
+        return ("ppermute" if self.n_blocks <= PPERMUTE_MAX_BLOCKS
+                else "allgather")
+
+
+def _resolve_inner(inner_impl: str) -> str:
+    if inner_impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if inner_impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown inner impl {inner_impl!r}")
+    return inner_impl
+
+
+# ---------------------------------------------------------------------------
+# Block-local pieces: transfer operator, boundary propagation, local scan.
+# ---------------------------------------------------------------------------
+
+def _shift_rows_down(t):
+    """t[..., j, :] -> t[..., j-1, :]; row 0 becomes 0."""
+    pad = [(0, 0)] * (t.ndim - 2) + [(1, 0), (0, 0)]
+    return jnp.pad(t, pad)[..., :-1, :]
+
+
+def _shift_rows_up(t):
+    """t[..., j, :] -> t[..., j+1, :]; last row becomes 0."""
+    pad = [(0, 0)] * (t.ndim - 2) + [(0, 1), (0, 0)]
+    return jnp.pad(t, pad)[..., 1:, :]
+
+
+def block_transfer_operator(wl, wc, wr, *, reverse: bool = False):
+    """T_k = ∏ M[r] over the block's rows, composed in scan order.
+
+    wl/wc/wr: (G_w, H_blk, W).  Returns (G_w, W, W) f32 mapping the
+    incoming boundary column to the outgoing one.  ``reverse=True``
+    composes bottom→top (the reverse-direction scan's operator).
+    """
+    gw, _, w = wl.shape
+
+    def body(t, row):
+        wl_r, wc_r, wr_r = (a.astype(jnp.float32)[..., None] for a in row)
+        # (M t)[j, c] = wl[j] t[j-1, c] + wc[j] t[j, c] + wr[j] t[j+1, c]
+        t = wl_r * _shift_rows_down(t) + wc_r * t + wr_r * _shift_rows_up(t)
+        return t, None
+
+    eye = jnp.broadcast_to(jnp.eye(w, dtype=jnp.float32), (gw, w, w))
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (wl, wc, wr))
+    t, _ = jax.lax.scan(body, eye, xs, reverse=reverse)
+    return t
+
+
+def _apply_transfer(t, b, cpw: int):
+    """t: (G_w, W, W) acting on boundary columns b: (G, W), G = G_w·cpw."""
+    gw = t.shape[0]
+    bg = b.reshape(gw, cpw, b.shape[-1])
+    return jnp.einsum("gjk,gck->gcj", t, bg).reshape(b.shape)
+
+
+def propagate_boundary(b, wl, wc, wr, *, reverse: bool = False):
+    """Carry a boundary column homogeneously through the block.
+
+    b: (G, W); taps (G_w, H_blk, W).  Returns (G, H_blk, W) f32 where row
+    i holds (∏_{entry..i} M[r]) b — exactly the correction each local row
+    needs once the true incoming boundary is known.  Cost matches one
+    local scan minus the lam·x term; no (W, W) operator is materialised.
+    """
+    g = b.shape[0]
+    wl = _ref._broadcast_w(wl, g)
+    wc = _ref._broadcast_w(wc, g)
+    wr = _ref._broadcast_w(wr, g)
+
+    def body(h, row):
+        wl_r, wc_r, wr_r = row
+        h = (wl_r * _ref._shift_right(h) + wc_r * h
+             + wr_r * _ref._shift_left(h))
+        return h, h
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (wl, wc, wr))
+    _, cs = jax.lax.scan(body, b.astype(jnp.float32), xs, reverse=reverse)
+    return jnp.moveaxis(cs, 0, 1)
+
+
+def _local_scan(cfg: SPConfig, x, wl, wc, wr, lam, *, reverse: bool):
+    """Block-local scan with zero incoming state (the existing kernels)."""
+    if not reverse and cfg.inner_impl == "pallas":
+        return _pk.gspn_scan_fwd_pallas(
+            x, wl, wc, wr, lam,
+            channels_per_weight=cfg.channels_per_weight,
+            row_tile=cfg.row_tile, interpret=cfg.interpret)
+    # Reverse-direction local scans (the adjoint pass) go through the XLA
+    # fused-scan oracle — same recurrence, reversed row walk.
+    return _ref.gspn_scan_ref(x, wl, wc, wr, lam, reverse=reverse)
+
+
+# ---------------------------------------------------------------------------
+# The single logical boundary exchange.
+# ---------------------------------------------------------------------------
+
+def _exchange(t, b_last, cfg: SPConfig, *, reverse: bool):
+    """Compose block boundaries across the ``seq`` axis.
+
+    t: (G_w, W, W) local transfer operator; b_last: (G, W) local
+    uncorrected outgoing boundary.  Returns the corrected INCOMING
+    boundary for this block — zeros for the first block in scan order.
+    This is the only cross-device communication of the scan: one logical
+    exchange of boundary columns (never full activations).
+    """
+    k, ax, cpw = cfg.n_blocks, cfg.axis_name, cfg.channels_per_weight
+    zero = jnp.zeros_like(b_last, dtype=jnp.float32)
+    if k == 1:
+        return zero
+    b_last = b_last.astype(jnp.float32)
+    idx = jax.lax.axis_index(ax)
+    # Position in scan order: the reverse pass consumes blocks last→first.
+    pos = (k - 1 - idx) if reverse else idx
+
+    if cfg.resolved_strategy() == "ppermute":
+        # Neighbour chain: K-1 hops, each forwarding one boundary column.
+        # At hop s the block at scan position s-1 (whose incoming boundary
+        # was finalised at hop s-1) sends its corrected outgoing boundary
+        # T·b_in + b_last to position s; everyone else's payload is
+        # ignored by the masked update.
+        perm = ([(i, i - 1) for i in range(1, k)] if reverse
+                else [(i, i + 1) for i in range(k - 1)])
+        b_in = zero
+        for s in range(1, k):
+            send = _apply_transfer(t, b_in, cpw) + b_last
+            recv = jax.lax.ppermute(send, ax, perm)
+            b_in = jnp.where(pos == s, recv, b_in)
+        return b_in
+
+    # allgather: ONE log-depth collective of the compact (T, b) pairs;
+    # each device then folds its own prefix with K cheap matvecs (the
+    # composition (T_b, b_b)∘(T_a, b_a) = (T_b T_a, T_b b_a + b_b) applied
+    # left-to-right in scan order — no (W, W) matmuls needed since only
+    # the boundary column, not the composed operator, is consumed).
+    tg = jax.lax.all_gather(t, ax)            # (K, G_w, W, W) device order
+    bg = jax.lax.all_gather(b_last, ax)       # (K, G, W)
+    if reverse:
+        tg, bg = jnp.flip(tg, 0), jnp.flip(bg, 0)   # reorder to scan order
+
+    def fold(acc, pair):
+        tj, bj = pair
+        nxt = _apply_transfer(tj, acc, cpw) + bj
+        return nxt, nxt
+
+    _, prefixes = jax.lax.scan(fold, zero, (tg, bg))
+    # prefixes[p] is the incoming boundary of scan position p+1.
+    prefixes = jnp.concatenate([zero[None], prefixes[:-1]], axis=0)
+    return jnp.take(prefixes, pos, axis=0)
+
+
+def _block_scan(cfg: SPConfig, x, wl, wc, wr, lam, *, reverse: bool):
+    """One block-parallel scan pass (shard-local; collectives inside).
+
+    Returns (h, b_in): globally-corrected outputs for the local rows
+    (f32) and the corrected incoming boundary (f32, (G, W)).
+    """
+    h_loc = _local_scan(cfg, x, wl, wc, wr, lam,
+                        reverse=reverse).astype(jnp.float32)
+    b_last = h_loc[:, 0, :] if reverse else h_loc[:, -1, :]
+    t = block_transfer_operator(wl, wc, wr, reverse=reverse)
+    b_in = _exchange(t, b_last, cfg, reverse=reverse)
+    h = h_loc + propagate_boundary(b_in, wl, wc, wr, reverse=reverse)
+    return h, b_in
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp core (runs inside shard_map).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sp_core(cfg: SPConfig, x, wl, wc, wr, lam):
+    h, _ = _block_scan(cfg, x, wl, wc, wr, lam, reverse=False)
+    return h.astype(x.dtype)
+
+
+def _sp_core_fwd(cfg, x, wl, wc, wr, lam):
+    h, b_in = _block_scan(cfg, x, wl, wc, wr, lam, reverse=False)
+    return h.astype(x.dtype), (x, wl, wc, wr, lam, h, b_in)
+
+
+def _sp_core_bwd(cfg, res, dy):
+    x, wl, wc, wr, lam, h, b_in = res            # h, b_in already f32
+    k, ax = cfg.n_blocks, cfg.axis_name
+    wl32, wc32, wr32 = (a.astype(jnp.float32) for a in (wl, wc, wr))
+
+    # Adjoint taps at row i are row i+1's weights; the last local row's
+    # successor lives on the right neighbour — fetch its first weight row
+    # (one single-row ppermute; the exchange direction is reversed, as is
+    # the boundary composition below).  The globally-last block receives
+    # zeros: g[H-1] = dy[H-1].
+    w_first = jnp.stack([wl32[:, 0], wc32[:, 0], wr32[:, 0]])
+    if k > 1:
+        w_first = jax.lax.ppermute(
+            w_first, ax, [(i + 1, i) for i in range(k - 1)])
+    else:
+        w_first = jnp.zeros_like(w_first)
+
+    def rows_next(a, first_next):
+        return jnp.concatenate([a[:, 1:], first_next[:, None]], axis=1)
+
+    wl_n = rows_next(wl32, w_first[0])
+    wc_n = rows_next(wc32, w_first[1])
+    wr_n = rows_next(wr32, w_first[2])
+    # Transposed tridiagonal: g[i,j] = dy + wr[i+1,j-1]·g[i+1,j-1]
+    #                + wc[i+1,j]·g[i+1,j] + wl[i+1,j+1]·g[i+1,j+1].
+    wl_adj = _ref._shift_right(wr_n)
+    wc_adj = wc_n
+    wr_adj = _ref._shift_left(wl_n)
+
+    dy32 = dy.astype(jnp.float32)
+    g, _ = _block_scan(cfg, dy32, wl_adj, wc_adj, wr_adj,
+                       jnp.ones_like(dy32), reverse=True)
+
+    # Parameter/input grads are local given g and the previous-row states;
+    # the block's first row reads the forward incoming boundary.
+    h_prev = jnp.concatenate([b_in[:, None], h[:, :-1]], axis=1)
+    dx = (lam.astype(jnp.float32) * g).astype(x.dtype)
+    dlam = (x.astype(jnp.float32) * g).astype(lam.dtype)
+    dwl = g * _ref._shift_right(h_prev)
+    dwc = g * h_prev
+    dwr = g * _ref._shift_left(h_prev)
+    cpw = cfg.channels_per_weight
+    if cpw > 1:
+        gw = x.shape[0] // cpw
+        shp = (gw, cpw) + dwl.shape[1:]
+        dwl = dwl.reshape(shp).sum(axis=1)
+        dwc = dwc.reshape(shp).sum(axis=1)
+        dwr = dwr.reshape(shp).sum(axis=1)
+    return (dx, dwl.astype(wl.dtype), dwc.astype(wc.dtype),
+            dwr.astype(wr.dtype), dlam)
+
+
+_sp_core.defvjp(_sp_core_fwd, _sp_core_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point.
+# ---------------------------------------------------------------------------
+
+def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
+                 strategy: str = "auto", inner_impl: str = "auto",
+                 row_tile: int | None = None, interpret: bool = True,
+                 chunk: int | None = None, batch_axes=None):
+    """Spatially-sharded GSPN line scan (``impl="sp"``).
+
+    Same semantics and layout as :func:`repro.kernels.ops.gspn_scan` —
+    x, lam: (G, H, W); wl/wc/wr: (G_w, H, W) — but the scan dimension H is
+    partitioned into contiguous blocks over the ``axis_name`` mesh axis.
+    Differentiable in all tensor args (custom_vjp; the backward pass
+    reverses the exchange direction).  H need not divide the axis size.
+
+    On meshes that also carry data-parallel axes, the G dim stays
+    distributed over them (``batch_axes``, default: whichever of
+    ``("pod", "data")`` the mesh has, when they divide G and G_w) — the
+    scan is batch-parallel, so replicating G would force the partitioner
+    to all-gather activations at every layer.
+
+    Falls back to the single-device fused path when no mesh / no
+    ``axis_name`` axis / axis size 1, and for GSPN-local chunked scans
+    (``chunk`` resets the carry per segment, so the chunked fused path is
+    already parallel over segments and exchanges no boundary state);
+    ``impl="sp"`` is therefore safe to set unconditionally in configs,
+    but combining it with ``chunk`` yields no cross-device memory saving.
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown sp strategy {strategy!r}")
+    mesh = mesh if mesh is not None else compat.ambient_mesh()
+    n_seq = (mesh.shape[axis_name]
+             if mesh is not None and axis_name in mesh.axis_names else 1)
+    if n_seq == 1 or chunk is not None:
+        # GSPN-local chunking resets the carry at segment entry — there is
+        # no cross-block state to exchange, so the chunked fused path is
+        # already embarrassingly parallel and sp adds nothing to it.
+        from repro.kernels.ops import gspn_scan
+        return gspn_scan(x, wl, wc, wr, lam, chunk=chunk, impl="auto",
+                         row_tile=row_tile, interpret=interpret)
+
+    g, h_dim, w = x.shape
+    gw = wl.shape[0]
+    assert g % gw == 0, (g, gw)
+    h_blk = -(-h_dim // n_seq)
+    pad = h_blk * n_seq - h_dim
+    if pad:
+        # Zero rows at the scan end: zero taps/lam keep them exactly zero
+        # through forward and adjoint, and real boundaries never cross them.
+        def pad_rows(a):
+            return jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        x, wl, wc, wr, lam = map(pad_rows, (x, wl, wc, wr, lam))
+
+    cfg = SPConfig(axis_name=axis_name, n_blocks=n_seq, strategy=strategy,
+                   inner_impl=_resolve_inner(inner_impl),
+                   channels_per_weight=g // gw, row_tile=row_tile,
+                   interpret=interpret)
+    if batch_axes is None:
+        batch_axes = ("pod", "data")
+    batch_axes = tuple(a for a in batch_axes
+                       if a in mesh.axis_names and a != axis_name)
+    bsize = 1
+    for a in batch_axes:
+        bsize *= mesh.shape[a]
+    # Shard G over dp only when both G and G_w divide: G is grouped
+    # (G_w, cpw)-contiguously, and gw % bsize == 0 keeps every weight
+    # group whole within its shard.
+    bspec = None
+    if bsize > 1 and g % bsize == 0 and gw % bsize == 0:
+        bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    spec = P(bspec, axis_name, None)
+    out = compat.shard_map(
+        functools.partial(_sp_core, cfg), mesh=mesh,
+        in_specs=(spec,) * 5, out_specs=spec,
+    )(x, wl, wc, wr, lam)
+    return out[:, :h_dim] if pad else out

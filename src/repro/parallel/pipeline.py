@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_apply(mesh, axis: str, stage_fn: Callable,
                    stage_params, x_micro, n_micro: int):
@@ -72,9 +74,8 @@ def pipeline_apply(mesh, axis: str, stage_fn: Callable,
             jnp.where(stage_idx == n_stages - 1, outputs, 0.0), axis)
         return outputs
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
     )(stage_params, x_micro)

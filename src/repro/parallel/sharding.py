@@ -79,7 +79,8 @@ def path_str(path) -> str:
 
 
 def sanitize_spec(spec, shape, mesh: Mesh):
-    """Drop mesh axes that do not evenly divide the array dim."""
+    """Drop mesh axes that the mesh lacks or that don't divide the dim —
+    one rule set then serves every mesh layout (incl. seq-only meshes)."""
     if spec is None:
         return P()
     out = []
@@ -88,6 +89,9 @@ def sanitize_spec(spec, shape, mesh: Mesh):
             out.append(None)
             continue
         axes = entry if isinstance(entry, tuple) else (entry,)
+        if any(a not in mesh.shape for a in axes):
+            out.append(None)
+            continue
         size = 1
         for a in axes:
             size *= mesh.shape[a]
@@ -182,3 +186,49 @@ def constrain(x, mesh: Mesh, spec: P):
     """with_sharding_constraint with divisibility sanitising."""
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, sanitize_spec(spec, x.shape, mesh)))
+
+
+# ---------------------------------------------------------------------------
+# Spatial sequence parallelism (DESIGN.md §8): activation specs for the
+# scan dimension.  The sp scan itself (parallel/gspn_sp.py) runs as a
+# shard_map over the ``seq`` axis; these helpers place the SURROUNDING
+# activations so the partitioner keeps them scan-dim-sharded between
+# scans instead of gathering them back per layer.
+# ---------------------------------------------------------------------------
+
+SEQ_AXIS = "seq"
+
+
+def scan_dim_spec(ndim: int, scan_dim: int = -2, *, batch_dim: int | None = 0,
+                  dp_axes=("data",), seq_axis: str = SEQ_AXIS) -> P:
+    """PartitionSpec sharding ``scan_dim`` over the seq axis (and the
+    batch dim over dp).  Works for (G, H, W) scan operands (default) and
+    (B, H, W, C) vision activations (``scan_dim=1``)."""
+    spec = [None] * ndim
+    spec[scan_dim % ndim] = seq_axis
+    if batch_dim is not None and batch_dim % ndim != scan_dim % ndim:
+        spec[batch_dim % ndim] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return P(*spec)
+
+
+def sp_activation_shardings(tree, mesh: Mesh, *, scan_dim: int = -2,
+                            batch_dim: int | None = 0, dp_axes=("data",),
+                            seq_axis: str = SEQ_AXIS):
+    """NamedSharding tree for scan-dim-sharded activations (sanitised, so
+    meshes without a ``seq`` axis degrade to plain dp sharding)."""
+    dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    have_seq = seq_axis in mesh.axis_names
+
+    def one(leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2 or not (
+                have_seq or dp_axes):
+            return NamedSharding(mesh, P())
+        spec = scan_dim_spec(leaf.ndim, scan_dim,
+                             batch_dim=batch_dim if dp_axes else None,
+                             dp_axes=dp_axes or ("data",),
+                             seq_axis=seq_axis)
+        if not have_seq:
+            spec = P(*(None if s == seq_axis else s for s in spec))
+        return NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))
+
+    return jax.tree.map(one, tree)

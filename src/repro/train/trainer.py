@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, host_batch
 from repro.optim.adamw import AdamWConfig
@@ -115,7 +116,7 @@ class Trainer:
             try:
                 if self.failure_injector is not None:
                     self.failure_injector(self.step)
-                with jax.set_mesh(self.mesh):
+                with compat.set_mesh(self.mesh):
                     new_state, metrics = self.setup.jit_step(self.state,
                                                              batch)
                 jax.block_until_ready(new_state)

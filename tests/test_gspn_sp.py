@@ -1,0 +1,305 @@
+"""Spatial sequence parallelism (parallel/gspn_sp.py, DESIGN.md §8).
+
+Runs on 8 forced host-platform CPU devices via the ``run_sub`` conftest
+fixture.  Proves:
+
+* numerical equivalence of ``impl="sp"`` vs the single-device fused path
+  to 1e-5 (f32) — forward AND gradients — across all four directions,
+  compact channel mode, and non-divisible block sizes;
+* both exchange strategies (ppermute chain / all-gather prefix fold);
+* the collective count: ≤ 1 logical boundary exchange per scan direction
+  (a K-1-hop ppermute chain of boundary columns counts as one), and no
+  full-activation collective anywhere in the forward scan;
+* model-layer wiring (vision attention block and LM folded-sequence
+  mixer run sharded and match their single-device outputs);
+* the graceful single-device fallback (no mesh ⇒ plain fused scan).
+"""
+
+import pytest
+
+pytestmark = pytest.mark.distributed
+
+# Shared by the equivalence bodies: direction-stacked inputs in ORIGINAL
+# orientation (taps generated per oriented geometry, like the attention
+# module does), plus a scalarising loss for gradient comparison.
+_SETUP = """
+    from repro.core import gspn as G
+
+    def inputs(b, cp, h, w, seed=0):
+        g = b * cp
+        nd = len(G.DIRECTIONS)
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(ks[0], (g, h, w))
+        lam = jax.nn.sigmoid(jax.random.normal(ks[1], (nd, g, h, w)))
+        logits = jax.random.normal(ks[2], (nd, b, h, w, 3))
+        taps = [G._normalize_taps_oriented(logits[i], d, "softmax")
+                for i, d in enumerate(G.DIRECTIONS)]
+        wl, wc, wr = (jnp.stack([t[k] for t in taps]) for k in range(3))
+        return x, wl, wc, wr, lam
+
+    def loss(fn):
+        return lambda *a: jnp.sum(jnp.sin(fn(*a)))
+
+    def check_tree(got, want, rtol, atol):
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=rtol, atol=atol)
+"""
+
+
+def test_sp_matches_single_device_all_directions(run_sub):
+    """All four directions at once through directional_scan: forward and
+    all five gradients, compact channel mode (cpw=3), scan lengths that do
+    NOT divide the 8-way mesh (H=21 vertical, W=12 horizontal)."""
+    run_sub(_SETUP + """
+        mesh = make_mesh((8,), ("seq",))
+        x, wl, wc, wr, lam = inputs(2, 3, 21, 12)
+
+        ref_fn = lambda *a: G.directional_scan(*a, G.DIRECTIONS, impl="xla")
+        ref = ref_fn(x, wl, wc, wr, lam)
+        g_ref = jax.grad(loss(ref_fn), argnums=(0, 1, 2, 3, 4))(
+            x, wl, wc, wr, lam)
+
+        for strategy in ("ppermute", "allgather"):
+            sp_fn = lambda *a: G.directional_scan(
+                *a, G.DIRECTIONS, impl="sp", mesh=mesh,
+                sp_strategy=strategy)
+            out = jax.jit(sp_fn)(x, wl, wc, wr, lam)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
+            g_sp = jax.jit(jax.grad(loss(sp_fn), argnums=(0, 1, 2, 3, 4)))(
+                x, wl, wc, wr, lam)
+            check_tree(g_sp, g_ref, 1e-4, 1e-5)
+    """, timeout=560)
+
+
+def test_sp_non_compact_and_divisible_blocks(run_sub):
+    """Per-channel taps (cpw=1) and an evenly dividing scan length, single
+    direction each way (tb + rl), against BOTH the XLA oracle and the
+    fused Pallas kernel (interpret)."""
+    run_sub(_SETUP + """
+        from repro.kernels.ops import gspn_scan
+        mesh = make_mesh((8,), ("seq",))
+        g, h, w = 4, 24, 16
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        x = jax.random.normal(ks[0], (g, h, w))
+        lam = jax.nn.sigmoid(jax.random.normal(ks[1], (g, h, w)))
+        wl, wc, wr = G.normalize_taps(jax.random.normal(ks[2], (g, h, w, 3)))
+
+        for d in ("tb", "rl"):
+            args = (x, wl, wc, wr, lam)
+            ref_fn = lambda *a: G.directional_scan(*a, d, impl="xla")
+            pal_fn = lambda *a: G.directional_scan(*a, d, impl="pallas")
+            sp_fn = lambda *a: G.directional_scan(*a, d, impl="sp",
+                                                  mesh=mesh)
+            ref = ref_fn(*args)
+            np.testing.assert_allclose(np.asarray(pal_fn(*args)),
+                                       np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(jax.jit(sp_fn)(*args)),
+                                       np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
+            g_sp = jax.jit(jax.grad(loss(sp_fn), argnums=(0, 1, 2, 3, 4)))(
+                *args)
+            g_ref = jax.grad(loss(ref_fn), argnums=(0, 1, 2, 3, 4))(*args)
+            check_tree(g_sp, g_ref, 1e-4, 1e-5)
+    """, timeout=560)
+
+
+def test_sp_collective_counts(run_sub):
+    """Pins the communication contract of one scan direction: at most ONE
+    logical boundary exchange — either ≤ K-1 chained ppermutes whose
+    payload is exactly the (G, W) boundary column, or 2 all-gathers (the
+    (G_w, W, W) transfer operator + the boundary column).  No other
+    collective kind, and never a full (G, H_blk, W) activation payload."""
+    run_sub("""
+        from repro.core.gspn import normalize_taps
+        from repro.parallel.gspn_sp import gspn_scan_sp
+
+        def collectives(fn, *args):
+            found = []
+            def walk(jaxpr):
+                for eqn in jaxpr.eqns:
+                    nm = eqn.primitive.name
+                    if ("all_gather" in nm or "psum" in nm
+                            or nm in ("ppermute", "all_to_all", "pgather")):
+                        found.append(
+                            (nm, [tuple(v.aval.shape) for v in eqn.invars]))
+                    for v in eqn.params.values():
+                        vs = v if isinstance(v, (list, tuple)) else [v]
+                        for j in vs:
+                            if hasattr(j, "jaxpr"):
+                                walk(j.jaxpr)
+                            elif hasattr(j, "eqns"):
+                                walk(j)
+            walk(jax.make_jaxpr(fn)(*args).jaxpr)
+            return found
+
+        mesh = make_mesh((8, ), ("seq",))
+        g_dim, gw, h, w = 6, 2, 24, 16
+        hb = h // 8
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = jax.random.normal(ks[0], (g_dim, h, w))
+        lam = jax.nn.sigmoid(jax.random.normal(ks[1], (g_dim, h, w)))
+        wl, wc, wr = normalize_taps(jax.random.normal(ks[2], (gw, h, w, 3)))
+
+        cs = collectives(lambda *a: gspn_scan_sp(*a, mesh=mesh,
+                                                 strategy="ppermute"),
+                         x, wl, wc, wr, lam)
+        kinds = {nm for nm, _ in cs}
+        assert kinds == {"ppermute"}, cs
+        assert len(cs) <= 7, cs                      # one K-1-hop chain
+        for nm, shapes in cs:                        # boundary columns only
+            assert shapes == [(g_dim, w)], cs
+
+        cs = collectives(lambda *a: gspn_scan_sp(*a, mesh=mesh,
+                                                 strategy="allgather"),
+                         x, wl, wc, wr, lam)
+        kinds = {nm for nm, _ in cs}
+        assert all("all_gather" in k for k in kinds), cs
+        assert len(cs) == 2, cs                      # operator + boundary
+        payloads = sorted(s for _, ss in cs for s in ss)
+        assert payloads == [(gw, w, w), (g_dim, w)] or \
+               payloads == sorted([(gw, w, w), (g_dim, w)]), cs
+        for _, shapes in cs:                         # never an activation
+            assert (g_dim, hb, w) not in shapes and (g_dim, h, w) not in shapes
+    """)
+
+
+def test_sp_hybrid_data_seq_mesh(run_sub):
+    """On a ("data", "seq") mesh the G dim stays data-sharded inside the
+    scan's shard_map (no activation gather to replicate G) and the only
+    collective is still the seq boundary exchange."""
+    run_sub(_SETUP + """
+        from repro.parallel.gspn_sp import gspn_scan_sp
+        mesh = make_mesh((2, 4), ("data", "seq"))
+        g, gw, h, w = 8, 4, 21, 16          # cpw=2, both divide data=2
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        x = jax.random.normal(ks[0], (g, h, w))
+        lam = jax.nn.sigmoid(jax.random.normal(ks[1], (g, h, w)))
+        wl, wc, wr = G.normalize_taps(
+            jax.random.normal(ks[2], (gw, h, w, 3)))
+
+        from repro.kernels.ref import gspn_scan_ref
+        ref_fn = lambda *a: gspn_scan_ref(*a)
+        sp_fn = lambda *a: gspn_scan_sp(*a, mesh=mesh)
+        ref = ref_fn(x, wl, wc, wr, lam)
+        out = jax.jit(sp_fn)(x, wl, wc, wr, lam)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        g_sp = jax.jit(jax.grad(loss(sp_fn), argnums=(0, 1, 2, 3, 4)))(
+            x, wl, wc, wr, lam)
+        g_ref = jax.grad(loss(ref_fn), argnums=(0, 1, 2, 3, 4))(
+            x, wl, wc, wr, lam)
+        check_tree(g_sp, g_ref, 1e-4, 1e-5)
+
+        # the output really is data×seq sharded, not replicated-G
+        from jax.sharding import PartitionSpec as P
+        assert jax.jit(sp_fn).lower(x, wl, wc, wr, lam).compile()\\
+            .output_shardings.spec == P("data", "seq", None)
+    """, timeout=560)
+
+
+def test_sp_model_layer_wiring(run_sub):
+    """The vision attention block and the LM folded-sequence mixer run
+    sharded (impl="sp" + mesh) and match their single-device outputs."""
+    run_sub("""
+        import dataclasses
+        from repro.core import gspn as G
+
+        mesh = make_mesh((8,), ("seq",))
+        # Vision attention module: 14x14 grid (non-divisible by 8).
+        cfg = G.GSPNAttentionConfig(dim=16, proxy_dim=2, impl="xla")
+        params = G.init_gspn_attention(jax.random.PRNGKey(0), cfg)
+        xv = jax.random.normal(jax.random.PRNGKey(1), (2, 14, 14, 16))
+        ref = G.apply_gspn_attention(params, xv, cfg)
+        cfg_sp = dataclasses.replace(cfg, impl="sp")
+        out = jax.jit(lambda p, x: G.apply_gspn_attention(
+            p, x, cfg_sp, mesh=mesh))(params, xv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+        # LM mixer: L=100 folds to a 13x8 grid; both passes shard.
+        scfg = G.GSPNSeqConfig(dim=16, proxy_dim=2, row_width=8, impl="xla")
+        sp = G.init_gspn_seq_mixer(jax.random.PRNGKey(2), scfg)
+        xt = jax.random.normal(jax.random.PRNGKey(3), (2, 100, 16))
+        ref = G.apply_gspn_seq_mixer(sp, xt, scfg)
+        scfg_sp = dataclasses.replace(scfg, impl="sp")
+        out = jax.jit(lambda p, x: G.apply_gspn_seq_mixer(
+            p, x, scfg_sp, mesh=mesh))(sp, xt)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+        # Full vision backbone end-to-end with the Ctx mesh threading.
+        from repro.models.vision import (GSPNVisionConfig, init_vision,
+                                         apply_vision)
+        from repro.models.lm import Ctx
+        vcfg = GSPNVisionConfig(name="t", img_size=16, n_classes=4,
+                                dims=(8, 12), depths=(1, 1), proxy_dim=2,
+                                impl="xla")
+        vp = init_vision(jax.random.PRNGKey(4), vcfg)
+        img = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 16, 3))
+        ref = apply_vision(vp, img, vcfg)
+        vcfg_sp = dataclasses.replace(vcfg, impl="sp")
+        ctx = Ctx(mesh=mesh)
+        out = jax.jit(lambda p, x: apply_vision(p, x, vcfg_sp,
+                                                ctx=ctx))(vp, img)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+    """, timeout=560)
+
+
+def test_sp_sharded_activation_specs(run_sub):
+    """parallel/sharding.py scan-dim helpers place activations on the seq
+    axis (and degrade to replication when the mesh lacks it)."""
+    run_sub("""
+        from jax.sharding import PartitionSpec as P
+        from repro.parallel.sharding import (scan_dim_spec,
+                                             sp_activation_shardings)
+        from repro.launch.mesh import make_sp_mesh, make_mesh_for_devices
+
+        assert scan_dim_spec(3) == P("data", "seq", None)
+        assert scan_dim_spec(4, 1, dp_axes=("data",)) == \\
+            P("data", "seq", None, None)
+
+        smesh = make_sp_mesh()
+        x = jnp.zeros((4, 16, 8))
+        sh = sp_activation_shardings(x, smesh)
+        assert sh.spec == P(None, "seq", None), sh.spec
+
+        dmesh = make_mesh_for_devices(jax.devices(), model_parallel=2,
+                                      seq_parallel=2)
+        assert dmesh.axis_names == ("data", "seq", "model")
+        sh = sp_activation_shardings(x, dmesh)
+        assert sh.spec == P("data", "seq", None), sh.spec
+        # no seq axis on the mesh -> dp only
+        dp = make_mesh_for_devices(jax.devices(), model_parallel=2)
+        sh = sp_activation_shardings(x, dp)
+        assert sh.spec == P("data", None, None), sh.spec
+    """)
+
+
+def test_sp_single_device_fallback():
+    """Without a mesh (or with a 1-wide seq axis) impl="sp" must silently
+    take the plain fused path — in-process, one device."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import gspn as G
+    from repro.kernels.ops import gspn_scan
+
+    g, h, w = 3, 9, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (g, h, w))
+    lam = jax.nn.sigmoid(jax.random.normal(ks[1], (g, h, w)))
+    wl, wc, wr = G.normalize_taps(jax.random.normal(ks[2], (g, h, w, 3)))
+    ref = gspn_scan(x, wl, wc, wr, lam, impl="xla")
+    out = gspn_scan(x, wl, wc, wr, lam, impl="sp")       # no mesh anywhere
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # chunked requests route to the (already parallel) chunked fused path
+    out = gspn_scan(x, wl, wc, wr, lam, impl="sp", chunk=3)
+    ref = gspn_scan(x, wl, wc, wr, lam, impl="xla", chunk=3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)

@@ -14,6 +14,7 @@ def test_dryrun_cell_builds_and_compiles_small_mesh():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, dataclasses
         import jax.numpy as jnp
+        from repro.compat import make_mesh, set_mesh
         from repro.configs.base import get_arch, input_specs, ShapeSpec
         from repro.models import lm as lm_mod
         from repro.parallel import sharding as shd
@@ -21,8 +22,7 @@ def test_dryrun_cell_builds_and_compiles_small_mesh():
         from repro.train.step import build_train_step
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         cfg = dataclasses.replace(get_arch("qwen2-1.5b").reduced(),
                                   n_model_shards=2)
         shape = ShapeSpec("tiny", "train", 64, 8)
@@ -38,13 +38,15 @@ def test_dryrun_cell_builds_and_compiles_small_mesh():
                "step": NamedSharding(mesh, P())}}
         step = build_train_step(cfg, ocfg, mesh=mesh, dp_axes=("data",),
                                 grad_accum=2)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             c = jax.jit(step, in_shardings=(ssh, bs),
                         out_shardings=(ssh, None),
                         donate_argnums=(0,)).lower(astate, batch).compile()
         m = c.memory_analysis()
         assert m.temp_size_in_bytes > 0
         cost = c.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # one dict per device, old jax
+            cost = cost[0]
         assert cost.get("flops", 0) > 0
         print("OK")
     """)
@@ -58,7 +60,8 @@ def test_production_mesh_shapes():
     script = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-        from repro.launch.mesh import make_production_mesh, dp_axes_for
+        from repro.launch.mesh import (make_production_mesh, dp_axes_for,
+                                       seq_axis_size)
         m1 = make_production_mesh()
         assert m1.axis_names == ("data", "model")
         assert m1.devices.shape == (16, 16)
@@ -66,6 +69,11 @@ def test_production_mesh_shapes():
         assert m2.axis_names == ("pod", "data", "model")
         assert m2.devices.shape == (2, 16, 16)
         assert dp_axes_for(m2) == ("pod", "data")
+        assert seq_axis_size(m2) == 1
+        m3 = make_production_mesh(seq_parallel=4)
+        assert m3.axis_names == ("data", "seq", "model")
+        assert m3.devices.shape == (4, 4, 16)
+        assert seq_axis_size(m3) == 4 and dp_axes_for(m3) == ("data",)
         print("OK")
     """)
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,

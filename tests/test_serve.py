@@ -70,3 +70,64 @@ def test_engine_mixed_lengths_continuous_batching():
                            max_new_tokens=n))
     res = eng.run()
     assert [len(res[i].tokens) for i in range(4)] == lens
+
+
+# ---------------------------------------------------------------------------
+# update_cache_slots: the scatter that refills decode slots after prefill.
+# Previously untested — the sp-sharded decode path (DESIGN.md §8) relies
+# on it not regressing silently.
+# ---------------------------------------------------------------------------
+
+def _gspn_cfg():
+    # gspn mixer prelude + attn unit: exercises BOTH batch-axis layouts
+    # (prelude caches stack (n, B, ...), unit caches (n_units, n, B, ...)).
+    return LMConfig(name="g", family="gspn", n_layers=2, d_model=48,
+                    n_heads=4, n_kv_heads=2, d_ff=96, vocab=128,
+                    prelude=(("gspn", 1),), unit=(("attn", 1),), n_units=1,
+                    remat="none")
+
+
+def test_update_cache_slots_partial_batch():
+    """Scattering a 2-request prefill into slots {0, 2} of 4 must rewrite
+    exactly those batch rows of every cache leaf and no others."""
+    from repro.models.lm import init_lm_cache
+    from repro.serve.engine import update_cache_slots
+
+    cfg = _gspn_cfg()
+    bs, max_len = 4, 32
+    caches = jax.tree.map(
+        lambda a: jnp.full_like(a, 7.0) if a.dtype != jnp.int32
+        else jnp.full_like(a, 7), init_lm_cache(cfg, bs, max_len))
+    new = jax.tree.map(
+        lambda a: jnp.full_like(a, -3.0) if a.dtype != jnp.int32
+        else jnp.full_like(a, -3), init_lm_cache(cfg, 2, max_len))
+
+    out = update_cache_slots(cfg, caches, new, [0, 2])
+
+    prelude_keys = {f"s{si}_{kind}" for si, (w, kind, n)
+                    in enumerate(cfg.stages()) if w == "prelude"}
+    for key, sub in out.items():
+        axis = 1 if key in prelude_keys else 2
+        for leaf in jax.tree.leaves(sub):
+            got = np.moveaxis(np.asarray(leaf, np.float32), axis, 0)
+            np.testing.assert_array_equal(got[[0, 2]], -3.0)
+            np.testing.assert_array_equal(got[[1, 3]], 7.0)
+
+
+def test_update_cache_slots_reuse_is_clean():
+    """Slot reuse must not leak the previous occupant's state: running a
+    request in a fresh engine vs in a slot that served a longer request
+    first must produce identical tokens."""
+    cfg = _cfg()
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = np.array([5, 9, 2, 11], np.int32)
+
+    fresh = ServeEngine(p, cfg, batch_size=1, max_len=64)
+    fresh.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
+    expect = fresh.run()[0].tokens
+
+    eng = ServeEngine(p, cfg, batch_size=1, max_len=64)
+    eng.submit(Request(uid=0, prompt=np.arange(9) % 128, max_new_tokens=12))
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=6))
+    res = eng.run()
+    assert res[1].tokens == expect
