@@ -21,6 +21,7 @@ MODULES = [
     ("table2", "benchmarks.table2_imagenet"),
     ("tables2", "benchmarks.tables2_proxy"),
     ("lm_step", "benchmarks.lm_step_bench"),
+    ("serve_load", "benchmarks.serve_load"),
 ]
 
 

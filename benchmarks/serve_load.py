@@ -1,0 +1,95 @@
+"""Offered-load serving ladder (see benchmarks/README.md).
+
+Plays an open-loop arrival process against the continuous-batching engine
+(DESIGN.md §9) over a (rate × prompt-length-mix) grid and reports, per
+rung, mean TTFT (the CSV us_per_call column) plus derived throughput,
+p50/max TTFT, mean inter-token latency and max queue depth.  Prompt
+lengths are drawn from a small discrete set so jit variants are bounded;
+a warm-up pass through every (chunk, tail, decode) shape keeps compile
+time out of the measured TTFTs.  ``--smoke`` runs one rung with 4
+requests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import benchmarks.common as common
+from repro.models.lm import LMConfig, init_lm
+from repro.serve.engine import Request, ServeEngine, drive
+
+# Discrete prompt-length mixes (tokens).  "short" fits one prefill chunk;
+# "long" needs 3 chunks; "mixed" interleaves both, which is the case the
+# chunked-prefill/decode interleave exists for.
+MIXES = {
+    "short": ([24], [1.0]),
+    "long": ([96], [1.0]),
+    "mixed": ([24, 96], [0.6, 0.4]),
+}
+RATES = [8.0, 32.0, 128.0]          # offered requests/s
+CHUNK = 32
+N_REQ = 16
+
+
+def _cfg():
+    return LMConfig(
+        name="serve-load", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+        prelude=(("gspn", 1),), unit=(("attn", 1),), n_units=1,
+        gspn_proxy_dim=4, gspn_row_width=16, remat="none",
+        compute_dtype=jnp.float32)
+
+
+def _requests(rng, n, plens, probs, rate):
+    lens = rng.choice(plens, size=n, p=probs)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
+    reqs = [Request(uid=i, prompt=rng.integers(0, 256, int(lens[i])),
+                    max_new_tokens=8) for i in range(n)]
+    return reqs, arrivals
+
+
+def run():
+    cfg = _cfg()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, batch_size=4, max_len=160,
+                      prefill_chunk=CHUNK, scheduler="fcfs")
+
+    rates = RATES[:1] if common.SMOKE else RATES
+    mixes = ["mixed"] if common.SMOKE else list(MIXES)
+    n_req = 4 if common.SMOKE else N_REQ
+
+    # Warm-up: compile every shape the ladder will hit (24-token one-shot
+    # prefill, 32-token chunk, decode step) so rung TTFTs measure the
+    # engine, not XLA.
+    for plen in (24, 96):
+        eng.submit(Request(uid=0, prompt=np.arange(plen) % 256,
+                           max_new_tokens=2))
+        eng.run()
+        eng.reset()
+
+    for mix in mixes:
+        plens, probs = MIXES[mix]
+        for rate in rates:
+            rng = np.random.default_rng(0)
+            reqs, arrivals = _requests(rng, n_req, plens, probs, rate)
+            dt = drive(eng, reqs, arrivals)
+            res = eng.results
+            assert len(res) == n_req
+            total = sum(len(r.tokens) for r in res.values())
+            ttfts = sorted(r.ttft for r in res.values())
+            itls = [t for r in res.values() for t in r.itl]
+            mean_ttft = sum(ttfts) / len(ttfts)
+            common.emit(
+                f"serve_load/{mix}/rate{rate:g}", mean_ttft * 1e6,
+                f"tok_s={total/dt:.1f} p50_ttft_ms={ttfts[len(ttfts)//2]*1e3:.2f} "
+                f"max_ttft_ms={ttfts[-1]*1e3:.2f} "
+                f"itl_ms={1e3*sum(itls)/max(len(itls),1):.2f} "
+                f"qdepth_max={eng.metrics['queue_depth_max']} "
+                f"chunks={eng.metrics['prefill_chunks']}")
+            eng.reset()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,21 +1,28 @@
-"""Batched serving with continuous batching.
+"""Request-generator driver for the continuous-batching engine.
 
-    PYTHONPATH=src python examples/serve_lm.py --requests 12 --batch 4
+    PYTHONPATH=src python examples/serve_lm.py --requests 12 --rate 8 \
+        --prefill-chunk 32 --scheduler sjf --mixer gspn
 
-Builds a small model, submits a stream of mixed-length requests, and runs
-the engine: prefill fills each slot's cache (KV / SSM state / GSPN row
-cache depending on --mixer), the batched decode step serves all slots,
-finished slots are refilled from the queue.
+Builds a small model, then plays an arrival process against the engine:
+requests arrive at ``--rate`` req/s (exponential inter-arrivals) with a
+short/long prompt mix, and the driver interleaves ``submit`` with engine
+``tick()``s — exactly how a deployment front-end would drive it.  Long
+prompts are consumed in ``--prefill-chunk``-token chunks between decode
+steps, so they never stall the decode batch (DESIGN.md §9).
+
+Printed metrics per request: TTFT (submit -> first token), queue delay
+(submit -> admission), mean inter-token latency, prefill chunk count and
+finish reason; aggregate: tok/s, p50/max TTFT, max queue depth.
+``--stream`` prints tokens as they are produced.
 """
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.models.lm import LMConfig, init_lm
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, drive
 
 
 def main():
@@ -23,9 +30,15 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="offered load, requests/s (0 = all at once)")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--scheduler", default="fcfs", choices=["fcfs", "sjf"])
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--mixer", default="attn",
                     choices=["attn", "gspn", "mlstm", "mamba"])
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are generated")
     args = ap.parse_args()
 
     cfg = LMConfig(
@@ -35,24 +48,49 @@ def main():
         gspn_proxy_dim=8, gspn_row_width=32, ssm_head_dim=32, remat="none")
     params = init_lm(jax.random.PRNGKey(0), cfg)
 
+    stream = (lambda uid, tok: print(f"    [stream] req {uid} -> {tok}")) \
+        if args.stream else None
     eng = ServeEngine(params, cfg, batch_size=args.batch, max_len=512,
-                      temperature=args.temperature, top_k=50)
+                      temperature=args.temperature, top_k=50,
+                      prefill_chunk=args.prefill_chunk,
+                      scheduler=args.scheduler, stream=stream)
+
+    # Request generator: discrete short/long prompt lengths (bounds jit
+    # variants), exponential inter-arrival times at the offered rate.
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        plen = int(rng.integers(4, 64))
-        eng.submit(Request(uid=i,
-                           prompt=rng.integers(0, 8192, plen),
-                           max_new_tokens=int(rng.integers(8,
-                                                           args.max_new))))
-    t0 = time.perf_counter()
-    results = eng.run()
-    dt = time.perf_counter() - t0
+    plens = rng.choice([16, 96], size=args.requests, p=[0.7, 0.3])
+    gaps = (rng.exponential(1.0 / args.rate, args.requests)
+            if args.rate > 0 else np.zeros(args.requests))
+    arrivals = np.cumsum(gaps)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 8192, int(plens[i])),
+                    max_new_tokens=int(rng.integers(
+                        min(8, args.max_new), args.max_new + 1)))
+            for i in range(args.requests)]
+
+    dt = drive(eng, reqs, arrivals, idle_sleep=0.005)
+
+    results = eng.results
+    if not results:
+        print("served 0 requests")
+        return
     total = sum(len(r.tokens) for r in results.values())
+    ttfts = sorted(r.ttft for r in results.values())
     print(f"served {len(results)} requests / {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s, mixer={args.mixer}, "
-          f"slots={args.batch})")
-    for uid in sorted(results)[:4]:
-        print(f"  req {uid}: {results[uid].tokens[:10]}...")
+          f"slots={args.batch}, chunk={eng.prefill_chunk}, "
+          f"sched={args.scheduler})")
+    m = eng.metrics
+    print(f"ttft p50 {ttfts[len(ttfts)//2]*1e3:.1f} ms / "
+          f"max {ttfts[-1]*1e3:.1f} ms; queue depth "
+          f"mean {m['queue_depth_sum']/max(m['depth_samples'], 1):.1f} / "
+          f"max {m['queue_depth_max']}")
+    for uid in sorted(results)[:6]:
+        r = results[uid]
+        itl = 1e3 * (sum(r.itl) / len(r.itl)) if r.itl else 0.0
+        print(f"  req {uid}: {len(r.tokens)} toks, "
+              f"ttft {r.ttft*1e3:.1f} ms, queue {r.queue_delay*1e3:.1f} ms, "
+              f"itl {itl:.1f} ms, chunks {r.prefill_chunks}, "
+              f"{r.finish_reason}: {r.tokens[:8]}...")
 
 
 if __name__ == "__main__":

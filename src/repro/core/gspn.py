@@ -332,6 +332,85 @@ def _fold_len(l: int, row_width: int) -> tuple[int, int]:
     return h, w
 
 
+def _seq_mixer_projections(params, xf):
+    """Per-token projections shared by the one-shot and chunked paths.
+    xf: (B, L, D) f32.  Returns (x_p, taps, row_g, lam, u)."""
+    x_p = xf @ params["down"].astype(jnp.float32)            # (B,L,Cp)
+    taps = xf @ params["w_taps"].astype(jnp.float32)         # (B,L,3)
+    row_g = jax.nn.sigmoid(xf @ params["w_row"].astype(jnp.float32))
+    lam = jax.nn.sigmoid(xf @ params["w_lam"].astype(jnp.float32))
+    u = xf @ params["w_u"].astype(jnp.float32)
+    return x_p, taps, row_g, lam, u
+
+
+def _fold_ops(b, h, w, l):
+    """The row-major (B, L, K) <-> (B*K, H, W) fold/unfold pair for a
+    sequence of l tokens on an (h, w) grid (zero-padded tail).  One
+    definition serves the one-shot and chunked paths — the chunked≡
+    one-shot equivalence depends on an identical layout."""
+    pad = h * w - l
+
+    def fold(a):
+        k = a.shape[-1]
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        a = a.reshape(b, h, w, k)
+        return jnp.moveaxis(a, -1, 1).reshape(b * k, h, w)
+
+    def unfold(a, k):
+        a = jnp.moveaxis(a.reshape(b, k, h, w), 1, -1)
+        return a.reshape(b, h * w, k)[:, :l]
+
+    return fold, unfold
+
+
+def _tb_taps(taps, fold, b, h, w, mode):
+    """Row-stochastic T→B tap weights from per-token logits (B, L, 3):
+    fold to the grid, regroup the 3 taps innermost, and normalise.
+    Shared by the one-shot and chunked paths."""
+    wl, wc, wr = normalize_taps(
+        fold(taps).reshape(b, 3, h, w).transpose(0, 2, 3, 1), mode)
+    return wl, wc, wr
+
+
+def _within_row_pass(x_p, row_g, lam_hi, b, l, fold, scan_kwargs):
+    """Pass 2 of the sequence mixer: causal within-row recurrence —
+    centre-tap-only 'lr'-oriented scan (wl=wr=0 ⇒ h[j] = g·h[j-1] + λ·x[j]
+    independently per grid row).  Shared by the one-shot and chunked
+    paths; rows reset their carry at column 0, so the pass is local to
+    whatever fold it is given."""
+    x_lr = _to_canonical(fold(x_p), "lr")
+    gate = _to_canonical(fold(jnp.broadcast_to(row_g, (b, l, 1))), "lr")
+    zeros = jnp.zeros_like(gate)
+    h_row = gspn_scan(x_lr, zeros, gate, zeros,
+                      _to_canonical(fold(lam_hi), "lr"), **scan_kwargs)
+    return _from_canonical(h_row, "lr")
+
+
+def _slice_boundary_cache(grid_tb, grid_row, l, w, prev_fallback):
+    """Slice the outgoing O(W) decode-cache state at (static) position l
+    from the scanned grids (B, Cp, H, W): previous/current grid rows of
+    the T→B pass plus the within-row state.  ``prev_fallback`` stands in
+    for the row above when the final partial row is the grid's FIRST row
+    — zeros at sequence start, the incoming boundary when chunking.  One
+    definition serves both paths so the streaming-cache convention cannot
+    drift (the 1e-5 chunked≡one-shot invariant depends on it)."""
+    i_last, j_last = (l - 1) // w, (l - 1) % w
+    row_i = grid_tb[:, :, i_last, :]
+    if j_last == w - 1:
+        prev_row = row_i
+        cur_row = row_i
+    else:
+        prev_row = (grid_tb[:, :, i_last - 1, :] if i_last > 0
+                    else prev_fallback)
+        col_mask = (jnp.arange(w) <= j_last).astype(jnp.float32)
+        cur_row = row_i * col_mask
+    return {
+        "prev_row": prev_row.astype(jnp.float32),
+        "cur_row": cur_row.astype(jnp.float32),
+        "row_state": grid_row[:, :, i_last, j_last].astype(jnp.float32),
+    }
+
+
 def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
                          return_cache: bool = False, *, mesh=None):
     """Causal sub-quadratic token mixer.  x: (B, L, D) -> (B, L, D).
@@ -350,45 +429,22 @@ def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
     b, l, d = x.shape
     cp = cfg.proxy_dim
     h, w = _fold_len(l, cfg.row_width)
-    pad = h * w - l
     xf = x.astype(jnp.float32)
 
-    x_p = xf @ params["down"].astype(jnp.float32)            # (B,L,Cp)
-    taps = xf @ params["w_taps"].astype(jnp.float32)         # (B,L,3)
-    row_g = jax.nn.sigmoid(xf @ params["w_row"].astype(jnp.float32))
-    lam = jax.nn.sigmoid(xf @ params["w_lam"].astype(jnp.float32))
-    u = xf @ params["w_u"].astype(jnp.float32)
-
-    def fold(a):  # (B, L, K) -> (B*K, H, W)
-        k = a.shape[-1]
-        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
-        a = a.reshape(b, h, w, k)
-        return jnp.moveaxis(a, -1, 1).reshape(b * k, h, w)
-
-    def unfold(a, k):  # (B*K, H, W) -> (B, L, K)
-        a = jnp.moveaxis(a.reshape(b, k, h, w), 1, -1)
-        return a.reshape(b, h * w, k)[:, :l]
+    x_p, taps, row_g, lam, u = _seq_mixer_projections(params, xf)
+    fold, unfold = _fold_ops(b, h, w, l)
 
     scan_kwargs = dict(impl=cfg.impl, mesh=mesh, seq_axis=cfg.seq_axis,
                        sp_strategy=cfg.sp_strategy)
 
     # Pass 1: causal T->B 2D scan in proxy space, channel-shared taps.
-    wl, wc_, wr = normalize_taps(fold(taps).reshape(b * 3, h, w)
-                                 .reshape(b, 3, h, w).transpose(0, 2, 3, 1),
-                                 cfg.norm_mode)
+    wl, wc_, wr = _tb_taps(taps, fold, b, h, w, cfg.norm_mode)
     h_tb = gspn_scan(fold(x_p), wl, wc_, wr,
                      fold(lam[..., :cp]), **scan_kwargs)
 
-    # Pass 2: causal within-row scan — center-tap-only recurrence along W,
-    # realised as an 'lr'-oriented scan with chunk=1 row coupling removed
-    # (wl=wr=0 ⇒ h[j] = g·h[j-1] + lam·x[j] independently per row).
-    x_lr = _to_canonical(fold(x_p), "lr")
-    gate = _to_canonical(fold(jnp.broadcast_to(row_g, (b, l, 1))), "lr")
-    zeros = jnp.zeros_like(gate)
-    h_row = gspn_scan(x_lr, zeros, gate, zeros,
-                      _to_canonical(fold(lam[..., cp:]), "lr"),
-                      **scan_kwargs)
-    h_row = _from_canonical(h_row, "lr")
+    # Pass 2: causal within-row scan.
+    h_row = _within_row_pass(x_p, row_g, lam[..., cp:], b, l, fold,
+                             scan_kwargs)
 
     y = (unfold(h_tb, cp) * u[..., :cp] + unfold(h_row, cp) * u[..., cp:])
     y = y @ params["up"].astype(jnp.float32)
@@ -399,20 +455,84 @@ def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
     # Build the streaming cache for position l (static shapes).
     grid_tb = h_tb.reshape(b, cp, h, w)
     grid_row = h_row.reshape(b, cp, h, w)
-    i_last, j_last = (l - 1) // w, (l - 1) % w
-    row_i = grid_tb[:, :, i_last, :]
-    if j_last == w - 1:
-        prev_row = row_i
-        cur_row = row_i
-    else:
-        prev_row = (grid_tb[:, :, i_last - 1, :] if i_last > 0
-                    else jnp.zeros_like(row_i))
-        col_mask = (jnp.arange(w) <= j_last).astype(jnp.float32)
-        cur_row = row_i * col_mask
-    cache = {
-        "prev_row": prev_row.astype(jnp.float32),
-        "cur_row": cur_row.astype(jnp.float32),
-        "row_state": grid_row[:, :, i_last, j_last].astype(jnp.float32),
-        "pos": jnp.full((b,), l, jnp.int32),
-    }
+    cache = _slice_boundary_cache(grid_tb, grid_row, l, w,
+                                  jnp.zeros_like(grid_tb[:, :, 0, :]))
+    cache["pos"] = jnp.full((b,), l, jnp.int32)
     return y, cache
+
+
+def gspn_seq_prefill_chunk(params, x, cfg: GSPNSeqConfig, cache, *,
+                           mesh=None):
+    """Resume the folded causal scans from a streaming cache (DESIGN.md §9).
+
+    x: (B, T, D) — the next T prompt tokens; ``cache`` is the O(W) decode
+    cache from a previous call to this function (or a fresh all-zero
+    cache at pos 0).  Returns (y (B, T, D), new_cache) such that chaining
+    chunks is numerically equivalent to one one-shot prefill over the
+    concatenated tokens.  A cache advanced mid-row by ``gspn_decode_step``
+    is NOT a valid input — this path resumes from ``prev_row`` only and
+    would drop the partial ``cur_row``/``row_state`` (see the alignment
+    contract below).
+
+    State slicing: the recurrence only reads grid row i−1, so a chunk that
+    STARTS at a grid-row boundary needs exactly one boundary row of state.
+    The incoming ``prev_row`` is injected as a synthetic row 0 of the
+    chunk's folded grid with λ=1 and zero taps (the scan's zero initial
+    carry then reproduces it exactly), and the within-row pass is
+    chunk-local because every grid row resets its carry at column 0.
+
+    Contract (enforced by the serve engine, not checkable on traced
+    values): ``cache['pos'] % cfg.row_width == 0`` — i.e. all chunks but
+    the last must cover a whole number of grid rows.  Requires a fixed
+    ``cfg.row_width`` (the fold geometry must not depend on total length).
+    """
+    b, t, d = x.shape
+    cp = cfg.proxy_dim
+    w = cfg.row_width
+    if w <= 0:
+        raise ValueError(
+            "chunked GSPN prefill needs a fixed row_width (row_width=0 "
+            "derives the fold from the total length, which a chunked "
+            "caller does not know)")
+    hc = -(-t // w)
+    xf = x.astype(jnp.float32)
+
+    x_p, taps, row_g, lam, u = _seq_mixer_projections(params, xf)
+    fold, unfold = _fold_ops(b, hc, w, t)
+
+    scan_kwargs = dict(impl=cfg.impl, mesh=mesh, seq_axis=cfg.seq_axis,
+                       sp_strategy=cfg.sp_strategy)
+
+    # Pass 1: T->B scan seeded with the incoming boundary row.  Row 0 of
+    # the seeded grid carries prev_row (λ=1, taps=0 ⇒ h[0] = prev_row);
+    # the chunk's real rows then see the correct cross-chunk neighbour.
+    wl, wc_, wr = _tb_taps(taps, fold, b, hc, w, cfg.norm_mode)
+    ztap = jnp.zeros((b, 1, w), jnp.float32)
+    x_tb = jnp.concatenate(
+        [cache["prev_row"].reshape(b * cp, 1, w), fold(x_p)], axis=1)
+    lam_tb = jnp.concatenate(
+        [jnp.ones((b * cp, 1, w), jnp.float32), fold(lam[..., :cp])], axis=1)
+    h_tb = gspn_scan(x_tb,
+                     jnp.concatenate([ztap, wl], axis=1),
+                     jnp.concatenate([ztap, wc_], axis=1),
+                     jnp.concatenate([ztap, wr], axis=1),
+                     lam_tb, **scan_kwargs)[:, 1:]
+
+    # Pass 2: within-row scan — every grid row resets at column 0 and
+    # chunks start at row boundaries, so this pass is chunk-local.
+    h_row = _within_row_pass(x_p, row_g, lam[..., cp:], b, t, fold,
+                             scan_kwargs)
+
+    y = (unfold(h_tb, cp) * u[..., :cp] + unfold(h_row, cp) * u[..., cp:])
+    y = (y @ params["up"].astype(jnp.float32)).astype(x.dtype)
+
+    # Slice the outgoing boundary state — same construction as the
+    # one-shot cache, with the incoming prev_row standing in when the
+    # chunk is a single partial row.  All indices are static in T, so
+    # this traces once per chunk length.
+    grid_tb = h_tb.reshape(b, cp, hc, w)
+    grid_row = h_row.reshape(b, cp, hc, w)
+    new_cache = _slice_boundary_cache(
+        grid_tb, grid_row, t, w, cache["prev_row"].astype(jnp.float32))
+    new_cache["pos"] = cache["pos"] + t
+    return y, new_cache

@@ -1,13 +1,21 @@
 """Serving launcher: load (or init) a model and serve a synthetic request
-stream with the continuous-batching engine.
+stream through the continuous-batching engine (DESIGN.md §9).
+
+Engine knobs surfaced here: ``--max-batch`` (decode slots),
+``--prefill-chunk`` (0 = one-shot prefill; otherwise prompts are consumed
+in chunks interleaved with decode), ``--scheduler fcfs|sjf``, ``--impl``
+(GSPN kernel selection threaded into the model config), and
+``--seq-parallel`` (serve through a `seq`-axis mesh so the GSPN scans
+shard across devices, DESIGN.md §8).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
-        --reduced --requests 8
+        --reduced --requests 8 --prefill-chunk 128 --scheduler sjf
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -15,7 +23,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import get_arch
-from repro.models.lm import init_lm
+from repro.models.lm import Ctx, init_lm
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -24,15 +32,40 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-batch", "--batch", type=int, default=4,
+                    dest="max_batch")
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill size in tokens (0 = one-shot)")
+    ap.add_argument("--scheduler", default="fcfs", choices=["fcfs", "sjf"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--impl", default="",
+                    help="override the GSPN kernel impl= knob "
+                         "(auto|pallas|multidir|xla|sp)")
+    ap.add_argument("--seq-parallel", type=int, default=1,
+                    help="carve a seq mesh axis of this size and serve "
+                         "the sharded model (impl=sp, DESIGN.md §8)")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
     entry = get_arch(args.arch)
     cfg = entry.reduced() if args.reduced else entry.full()
+    if args.impl:
+        cfg = dataclasses.replace(cfg, gspn_impl=args.impl)
+
+    ctx = None
+    if args.seq_parallel > 1:
+        from repro.launch.mesh import dp_axes_for, make_sp_mesh
+        mesh = make_sp_mesh(args.seq_parallel)
+        ctx = Ctx(mesh=mesh, dp_axes=dp_axes_for(mesh))
+        if not args.impl:
+            # the mesh is only consulted by impl="sp"; without this the
+            # seq axis would be carved and then silently unused
+            cfg = dataclasses.replace(cfg, gspn_impl="sp")
+        print(f"[serve] mesh axes {dict(zip(mesh.axis_names, mesh.shape))} "
+              f"(gspn impl={cfg.gspn_impl})")
+
     params = init_lm(jax.random.PRNGKey(0), cfg)
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir)
@@ -40,20 +73,39 @@ def main():
         params = restored["params"]
         print(f"[serve] restored checkpoint step {step}")
 
-    eng = ServeEngine(params, cfg, batch_size=args.batch,
-                      max_len=args.max_len, temperature=args.temperature)
+    eng = ServeEngine(params, cfg, batch_size=args.max_batch,
+                      max_len=args.max_len, temperature=args.temperature,
+                      prefill_chunk=args.prefill_chunk,
+                      scheduler=args.scheduler, ctx=ctx)
     rng = np.random.default_rng(0)
+    # Discrete prompt lengths (each distinct length is a separate jit
+    # trace of the prefill); when chunking is on, the long length must
+    # actually exceed the (alignment-snapped) chunk so the chunked path
+    # runs at this entry point's workload sizes.
+    long_len = min(args.max_len - args.max_new,
+                   3 * eng.prefill_chunk) if eng.prefill_chunk else 24
     for i in range(args.requests):
+        plen = long_len if (eng.prefill_chunk and i % 2) else 12
         eng.submit(Request(
-            uid=i, prompt=rng.integers(0, cfg.vocab,
-                                       int(rng.integers(4, 32))),
+            uid=i, prompt=rng.integers(0, cfg.vocab, max(plen, 4)),
             max_new_tokens=args.max_new))
     t0 = time.perf_counter()
     results = eng.run()
     dt = time.perf_counter() - t0
+    if not results:
+        print(f"[serve] {args.arch}: 0 requests")
+        return
     total = sum(len(r.tokens) for r in results.values())
+    ttfts = sorted(r.ttft for r in results.values())
+    m = eng.metrics
     print(f"[serve] {args.arch}: {len(results)} requests, {total} tokens, "
           f"{total/dt:.1f} tok/s")
+    print(f"[serve] ttft p50 {ttfts[len(ttfts)//2]*1e3:.1f} ms, "
+          f"max {ttfts[-1]*1e3:.1f} ms; queue depth "
+          f"mean {m['queue_depth_sum']/max(m['depth_samples'], 1):.1f} / "
+          f"max {m['queue_depth_max']}; "
+          f"{m['prefill_chunks']} prefill chunks / "
+          f"{m['decode_steps']} decode steps over {m['ticks']} ticks")
 
 
 if __name__ == "__main__":

@@ -202,6 +202,31 @@ def chunked_attention(q, k, v, *, causal: bool = True, block_k: int = 512,
     return _flash_attention(q, k, v, causal, block_k, q_offset)
 
 
+def chunk_prefill_attention(q, k_cache, v_cache, q_offset):
+    """Chunked-prefill attention (DESIGN.md §9): a T-token prompt chunk at
+    absolute offset ``q_offset`` (traced scalar ok) attends over the padded
+    KV cache (B,S,Hkv,D), into which the chunk's own K/V have already been
+    written.  Key j is visible iff j <= q_offset + i, so the result equals
+    one-shot causal prefill restricted to these T query rows.
+
+    Dense over the padded cache, like ``decode_attention`` — the traced
+    offset cannot go through ``chunked_attention`` (``q_offset`` is a
+    nondiff_argnum of the flash vjp, so it would recompile per offset).
+    Fine at serve-engine cache sizes; a blockwise variant along the lines
+    of ``_fwd_blocks`` is the upgrade path if max_len grows."""
+    b, t, hq, d = q.shape
+    s = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    qg = _group_q(q, hkv).astype(jnp.float32) / math.sqrt(d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(jnp.float32))
+    iq = q_offset + jnp.arange(t)
+    mask = jnp.arange(s)[None, :] <= iq[:, None]
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, t, hq, d).astype(q.dtype)
+
+
 def decode_attention(q, k_cache, v_cache, cache_len):
     """One-step decode.  q (B,1,Hq,D); caches (B,S,Hkv,D); cache_len (B,)
     or scalar — number of valid cache entries (including the new token,

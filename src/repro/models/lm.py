@@ -272,15 +272,23 @@ def _apply_attn_block_decode(p, x, cfg, ctx, cache, enc_kv=None, moe=False):
 
 
 class Kind:
-    """Registry record for a block kind."""
+    """Registry record for a block kind.
+
+    ``apply_prefill_chunk`` (optional) consumes a T-token prompt chunk at
+    absolute offset ``off`` against an already-initialised decode cache and
+    returns (y, new_cache) — the incremental-prefill contract the serving
+    engine chunks prompts through (DESIGN.md §9).  Kinds without it force
+    the engine onto the one-shot prefill path.
+    """
 
     def __init__(self, init, apply, apply_decode, cache_init,
-                 apply_prefill=None):
+                 apply_prefill=None, apply_prefill_chunk=None):
         self.init = init
         self.apply = apply
         self.apply_decode = apply_decode
         self.cache_init = cache_init
         self.apply_prefill = apply_prefill
+        self.apply_prefill_chunk = apply_prefill_chunk
 
 
 def _mk_attn_kind(moe=False, cross=False):
@@ -344,7 +352,47 @@ def _mk_attn_kind(moe=False, cross=False):
             x = x + _ffn_apply(cfg, p["ffn"], h)
         return x, cache
 
-    return Kind(init, apply, apply_decode, cache_init, apply_prefill)
+    def apply_prefill_chunk(p, x, cfg, ctx, cache, off, enc_kv=None):
+        """Consume a (B, T) prompt chunk at offset ``off`` (traced scalar):
+        write the chunk's K/V into the cache in place and attend over the
+        cache with the offset causal mask — equal to one-shot prefill
+        restricted to these T rows (DESIGN.md §9)."""
+        b, t, _ = x.shape
+        acfg = _attn_cfg(cfg)
+        h = _norm_apply(cfg, p["ln1"], x)
+        q, k, v = attn_mod._project_qkv(p["attn"], h, acfg, cfg.policy)
+        positions = jnp.broadcast_to(
+            off + jnp.arange(t, dtype=jnp.int32)[None, :], (b, t))
+        q, k = attn_mod._apply_positions(q, k, positions, acfg)
+        kc = jax.lax.dynamic_update_slice(
+            cache["attn"]["k"], k.astype(cache["attn"]["k"].dtype),
+            (0, off, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["attn"]["v"], v.astype(cache["attn"]["v"].dtype),
+            (0, off, 0, 0))
+        out = attn_mod.chunk_prefill_attention(q, kc, vc, off)
+        out = out.reshape(b, t, acfg.n_heads * acfg.hd)
+        pc = cfg.policy.cast(p["attn"])
+        x = x + (out.astype(cfg.policy.compute_dtype)
+                 @ pc["wo"]).astype(x.dtype)
+        new_cache = {"attn": {
+            "k": kc, "v": vc,
+            "length": jnp.full((b,), 0, jnp.int32) + off + t,
+        }}
+        if moe:
+            h = _norm_apply(cfg, p["ln2"], x)
+            y, _ = moe_mod.apply_moe(p["moe"], h, _moe_cfg(cfg),
+                                     mesh=ctx.mesh, dp_axes=ctx.dp_axes,
+                                     model_axis=ctx.model_axis,
+                                     policy=cfg.policy)
+            x = x + y
+        elif "ffn" in p:
+            h = _norm_apply(cfg, p["ln2"], x)
+            x = x + _ffn_apply(cfg, p["ffn"], h)
+        return x, new_cache
+
+    return Kind(init, apply, apply_decode, cache_init, apply_prefill,
+                apply_prefill_chunk=None if cross else apply_prefill_chunk)
 
 
 def _mk_mixer_kind(name):
@@ -449,7 +497,21 @@ def _mk_mixer_kind(name):
             return x, cache
         raise ValueError(name)
 
-    return Kind(init, apply, apply_decode, cache_init, apply_prefill)
+    def apply_prefill_chunk(p, x, cfg, ctx, cache, off, enc_kv=None):
+        # Only the GSPN mixer has a resumable chunked scan; the other
+        # mixers' prefill paths start from a zero state, so the engine
+        # keeps them on one-shot prefill (supports_chunked_prefill).
+        h = _norm_apply(cfg, p["ln1"], x)
+        y, new = gspn_core.gspn_seq_prefill_chunk(
+            p["mix"], h, _gspn_cfg(cfg), cache,
+            mesh=ctx.mesh if ctx is not None else None)
+        x = x + y
+        h = _norm_apply(cfg, p["ln2"], x)
+        x = x + _ffn_apply(cfg, p["ffn"], h)
+        return x, new
+
+    return Kind(init, apply, apply_decode, cache_init, apply_prefill,
+                apply_prefill_chunk if name == "gspn" else None)
 
 
 KINDS = {
@@ -802,6 +864,117 @@ def lm_prefill(params, cfg: LMConfig, tokens, max_len: int, *,
             else params["head"]).astype(pol.compute_dtype)
     logits = x.astype(pol.compute_dtype) @ head
     return logits, caches, enc_kv
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: consume the prompt in fixed-size chunks against live
+# decode caches (DESIGN.md §9).  Shares weights with lm_prefill /
+# lm_decode_step — it is the same stage walk with apply_prefill_chunk.
+# ---------------------------------------------------------------------------
+
+def supports_chunked_prefill(cfg: LMConfig) -> bool:
+    """True iff every stage kind of ``cfg`` implements the incremental
+    prefill contract (attention families and the GSPN mixer).  SSM/xLSTM
+    mixers and encoder-decoder models fall back to one-shot prefill."""
+    if cfg.encoder_layers:
+        return False
+    kinds = {kind for _, kind, _ in cfg.stages()}
+    if cfg.shared_attn:
+        kinds.add("attn")
+    if any(KINDS[k].apply_prefill_chunk is None for k in kinds):
+        return False
+    if "gspn" in kinds and cfg.gspn_row_width <= 0:
+        return False           # fold geometry must not depend on length
+    return True
+
+
+def prefill_chunk_alignment(cfg: LMConfig) -> int:
+    """Chunk boundaries must start at GSPN grid-row boundaries, so chunk
+    sizes are rounded to a multiple of the fold width when a gspn stage is
+    present (gspn_seq_prefill_chunk contract); 1 otherwise."""
+    if any(kind == "gspn" for _, kind, _ in cfg.stages()):
+        return max(1, cfg.gspn_row_width)
+    return 1
+
+
+def lm_prefill_chunk(params, cfg: LMConfig, tokens, caches, off, *,
+                     ctx: Ctx = None, with_logits: bool = True):
+    """Consume prompt tokens (B, T) starting at absolute offset ``off``
+    (scalar int32, traced — one compile per chunk LENGTH, not per offset)
+    against ``caches`` shaped like :func:`init_lm_cache` output.  Returns
+    (logits (B, T, V), new_caches).  Chaining chunks and then decoding is
+    numerically equivalent to :func:`lm_prefill` over the whole prompt
+    (pinned at 1e-5 by tests/test_serve_engine.py).
+
+    ``with_logits=False`` (static) returns (None, new_caches), skipping
+    the final norm + vocab-head matmul — only the LAST chunk's logits
+    feed sampling, so intermediate chunks in the serve hot path need not
+    pay an O(T·V) head projection each."""
+    ctx = ctx or Ctx()
+    pol = cfg.policy
+    off = jnp.asarray(off, jnp.int32)
+    x = ctx.anchor(params["embed"].astype(pol.compute_dtype)[tokens])
+    new_caches = {}
+    stages = cfg.stages()
+
+    for si, (where, kind, n) in enumerate(stages):
+        if where != "prelude":
+            continue
+        kf = KINDS[kind]
+
+        def body(h, inp, kf=kf):
+            lp, cache = inp
+            h, new = kf.apply_prefill_chunk(lp, ctx.anchor(h), cfg, ctx,
+                                            cache, off)
+            return ctx.anchor(h), new
+
+        x, new = jax.lax.scan(body, x,
+                              (params["stages"][f"s{si}_{kind}"],
+                               caches[f"s{si}_{kind}"]))
+        new_caches[f"s{si}_{kind}"] = new
+
+    unit_stages = [(si, kind) for si, (w, kind, n) in enumerate(stages)
+                   if w == "unit"]
+    if unit_stages:
+        def unit_body(h, inp):
+            unit_params, unit_caches = inp
+            new_unit = {}
+            for si, kind in unit_stages:
+                kf = KINDS[kind]
+
+                def body(hh, pc, kf=kf):
+                    lp, cache = pc
+                    hh, new = kf.apply_prefill_chunk(lp, ctx.anchor(hh), cfg,
+                                                     ctx, cache, off)
+                    return ctx.anchor(hh), new
+
+                h, new = jax.lax.scan(
+                    body, h, (unit_params[f"s{si}_{kind}"],
+                              unit_caches[f"s{si}_{kind}"]))
+                new_unit[f"s{si}_{kind}"] = new
+            if cfg.shared_attn:
+                h, new_sh = KINDS["attn"].apply_prefill_chunk(
+                    params["shared_attn"], h, cfg, ctx,
+                    unit_caches["shared_attn"], off)
+                new_unit["shared_attn"] = new_sh
+            return h, new_unit
+
+        unit_params = {f"s{si}_{kind}": params["stages"][f"s{si}_{kind}"]
+                       for si, kind in unit_stages}
+        unit_caches = {k: caches[k] for k in
+                       [f"s{si}_{kind}" for si, kind in unit_stages]}
+        if cfg.shared_attn:
+            unit_caches["shared_attn"] = caches["shared_attn"]
+        x, new_unit = jax.lax.scan(unit_body, x, (unit_params, unit_caches))
+        new_caches.update(new_unit)
+
+    if not with_logits:
+        return None, new_caches
+    x = _norm_apply(cfg, params["ln_f"], ctx.anchor(x))
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["head"]).astype(pol.compute_dtype)
+    logits = x.astype(pol.compute_dtype) @ head
+    return logits, new_caches
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,110 @@
+"""Paged per-request propagation-state pool for the serving engine.
+
+Slot/cache lifecycle contract (DESIGN.md §9): the pool owns ONE batched
+cache pytree (`init_lm_cache(cfg, n_slots, max_len)`) whose batch axis is
+the slot id.  A request's life cycle against the pool is
+
+    slot = pool.alloc()          # admission — None when the batch is full
+    pool.commit(slot, cache_1)   # scatter a finished (batch-1) prefill in
+    pool.caches / pool.update()  # batched decode reads + writes all slots
+    pool.free(slot)              # retirement — slot id returns to the pool
+
+``alloc`` after ``free`` MUST be clean: ``commit`` overwrites every cache
+leaf's slot row, so a reused slot never observes its previous occupant's
+state (pinned by tests/test_serve_engine.py::test_cache_pool_*).  Unlike a
+KV cache, the GSPN/SSM leaves are O(1) in sequence length — paging a
+request in or out moves a compact recurrent state, not an O(L) history —
+which is what makes per-request admission/retirement cheap (LASP-2
+observation, PAPERS.md).
+
+`update_cache_slots` lives here (moved from ``serve.engine``, which
+re-exports it for compatibility): it is the scatter primitive ``commit``
+is built on, and is layout-aware — prelude/shared stages stack caches as
+(n, B, ...), unit stages as (n_units, n, B, ...).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as lm_mod
+
+
+def update_cache_slots(cfg, caches, new_caches, slots):
+    """Scatter ``new_caches`` (batch = len(slots)) into ``caches`` at the
+    given slot indices.  Batch-axis position depends on the stage kind:
+    prelude/shared stages stack (n, B, ...), unit stages (n_units, n, B...)."""
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def upd(axis):
+        def f(big, new):
+            bigm = jnp.moveaxis(big, axis, 0)
+            newm = jnp.moveaxis(new, axis, 0)
+            return jnp.moveaxis(bigm.at[slots].set(newm.astype(bigm.dtype)),
+                                0, axis)
+        return f
+
+    prelude_keys = {f"s{si}_{kind}" for si, (w, kind, n)
+                    in enumerate(cfg.stages()) if w == "prelude"}
+    out = {}
+    for key, sub in caches.items():
+        if key in prelude_keys or key == "shared_attn":
+            axis = 1
+        else:
+            axis = 2
+        out[key] = jax.tree.map(upd(axis), sub, new_caches[key])
+    return out
+
+
+class StateCachePool:
+    """Fixed-capacity pool of per-request propagation-state pages.
+
+    One page == one batch row of the engine-wide cache pytree.  The free
+    list is LIFO so tests can pin reuse; ``alloc`` returns ``None`` on
+    exhaustion (the scheduler's backpressure signal — requests then wait
+    in the admission queue).
+    """
+
+    def __init__(self, cfg, n_slots: int, max_len: int):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.caches = lm_mod.init_lm_cache(cfg, n_slots, max_len)
+        self._free = list(range(n_slots - 1, -1, -1))   # pop() yields slot 0
+        self._used = set()
+
+    # -- allocation ---------------------------------------------------------
+    def alloc(self):
+        """Claim a free slot id, or None when every slot is in use."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._used.add(slot)
+        return slot
+
+    def free(self, slot: int):
+        """Return a slot to the pool.  Double-free is a scheduler bug and
+        raises instead of silently corrupting the free list."""
+        if slot not in self._used:
+            raise ValueError(f"free of slot {slot} not in use")
+        self._used.remove(slot)
+        self._free.append(slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    # -- state movement -----------------------------------------------------
+    def commit(self, slot: int, new_caches):
+        """Scatter a finished batch-1 prefill cache into ``slot``."""
+        self.caches = update_cache_slots(self.cfg, self.caches,
+                                         new_caches, [slot])
+
+    def update(self, caches):
+        """Install the post-decode batched caches (all slots at once)."""
+        self.caches = caches

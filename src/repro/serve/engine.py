@@ -1,21 +1,42 @@
-"""Batched serving engine: prefill + decode with continuous batching.
+"""Continuous-batching serving engine with chunked GSPN prefill.
 
-Slots model vLLM-style continuous batching at request granularity: the
-engine keeps ``batch_size`` decode slots; finished slots are immediately
-refilled from the waiting queue via a single-prompt prefill whose caches
-are scattered into the slot (``update_cache_slots``).  The decode step for
-the whole batch is one jitted function, so throughput is independent of
-request mix.
+Architecture (DESIGN.md §9).  The engine is a slot-based scheduler over a
+:class:`~repro.serve.cache.StateCachePool`: requests move through
 
-Works for every architecture family — caches are whatever the block kinds
-define (KV for attention, SSM states for Mamba/xLSTM, the O(√L) row cache
+    QUEUED --admit--> PREFILL(chunk k/N) --commit--> DECODE --> FINISHED
+
+``tick()`` is the scheduling quantum: it admits waiting requests into free
+pool slots (``scheduler="fcfs"`` or ``"sjf"``), advances the in-flight
+prefill by at most ONE chunk, and runs ONE batched decode step for every
+active slot — so a long prompt never stalls the decode batch by more than
+one ``prefill_chunk`` of work.  Chunks run through the fused GSPN scan via
+``lm_prefill_chunk`` (offset-aware attention KV writes + boundary-seeded
+GSPN grid resume); prompts no longer than one chunk, and architectures
+without an incremental prefill path (SSM/xLSTM mixers, encoder-decoder),
+take the one-shot ``lm_prefill`` fast path inside the admission tick.
+
+Slot/cache lifecycle contract: a slot id is claimed from the pool at
+admission, receives exactly one committed prefill state, is decoded as one
+batch row until retirement (EOS or token budget), and returns to the pool
+— reuse must be clean because ``commit`` rewrites every cache leaf's slot
+row.  The decode step for the whole batch is one jitted function, so
+throughput is independent of request mix; works for every architecture
+family (KV for attention, SSM states for Mamba/xLSTM, the O(√L) row cache
 for the GSPN mixer).
+
+Observability: per-request TTFT / queue delay / inter-token latencies and
+a streaming ``stream(uid, token)`` callback; engine-level counters in
+``ServeEngine.metrics`` (ticks, decode steps, prefill chunks, queue depth).
+Batch drivers collect ``run()``'s results dict; long-running front-ends
+pass ``on_finish`` so retired results are delivered instead of retained
+and engine state stays bounded.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from collections import deque
+import time
 from typing import Callable, Optional
 
 import jax
@@ -23,32 +44,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm as lm_mod
-
-
-def update_cache_slots(cfg, caches, new_caches, slots):
-    """Scatter ``new_caches`` (batch = len(slots)) into ``caches`` at the
-    given slot indices.  Batch-axis position depends on the stage kind:
-    prelude/shared stages stack (n, B, ...), unit stages (n_units, n, B...)."""
-    slots = jnp.asarray(slots, jnp.int32)
-
-    def upd(axis):
-        def f(big, new):
-            bigm = jnp.moveaxis(big, axis, 0)
-            newm = jnp.moveaxis(new, axis, 0)
-            return jnp.moveaxis(bigm.at[slots].set(newm.astype(bigm.dtype)),
-                                0, axis)
-        return f
-
-    prelude_keys = {f"s{si}_{kind}" for si, (w, kind, n)
-                    in enumerate(cfg.stages()) if w == "prelude"}
-    out = {}
-    for key, sub in caches.items():
-        if key in prelude_keys or key == "shared_attn":
-            axis = 1
-        else:
-            axis = 2
-        out[key] = jax.tree.map(upd(axis), sub, new_caches[key])
-    return out
+from repro.serve.cache import StateCachePool, update_cache_slots  # noqa: F401
+# update_cache_slots is re-exported: it moved to serve.cache (the pool owns
+# the scatter) but long-standing callers import it from here.
 
 
 @dataclasses.dataclass
@@ -58,17 +56,62 @@ class Request:
     max_new_tokens: int = 32
 
 
+def sample_tokens(logits, rng, temperature: float, top_k: int):
+    """The engine-wide logits -> token policy (greedy when temperature<=0,
+    else temperature + optional top-k).  logits (B, V) -> (B,) int32.
+    One definition serves both the jitted batched decode step and the
+    host-side first-token draw, so the two can never drift."""
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        logits = jnp.where(logits < vals[:, -1:], -1e30, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def drive(engine, requests, arrivals, *, idle_sleep: float = 0.002):
+    """Open-loop arrival driver shared by examples and benchmarks: submit
+    each request at its arrival time (seconds relative to the call), tick
+    the engine in between, and return elapsed wall-clock seconds once the
+    engine drains.  Open-loop means arrivals never wait for completions —
+    queueing shows up in the metrics instead of being hidden."""
+    t0 = time.perf_counter()
+    nxt = 0
+    while nxt < len(requests) or not engine.idle:
+        now = time.perf_counter() - t0
+        while nxt < len(requests) and arrivals[nxt] <= now:
+            engine.submit(requests[nxt])
+            nxt += 1
+        if engine.idle and nxt < len(requests):
+            time.sleep(min(arrivals[nxt] - now, idle_sleep))
+            continue
+        engine.tick()
+    return time.perf_counter() - t0
+
+
 @dataclasses.dataclass
 class Result:
     uid: int
     tokens: list
+    ttft: float = 0.0               # submit -> first token (s)
+    queue_delay: float = 0.0        # submit -> admission (s)
+    itl: list = dataclasses.field(default_factory=list)  # inter-token (s)
+    prefill_chunks: int = 0         # 0 == one-shot prefill
+    finish_reason: str = ""         # "eos" | "length"
 
 
 class ServeEngine:
     def __init__(self, params, cfg, *, batch_size: int = 4,
                  max_len: int = 512, temperature: float = 0.0,
                  top_k: int = 0, eos_id: Optional[int] = None,
-                 seed: int = 0, ctx=None):
+                 seed: int = 0, ctx=None, prefill_chunk: int = 0,
+                 scheduler: str = "fcfs",
+                 stream: Optional[Callable[[int, int], None]] = None,
+                 on_finish: Optional[Callable[[Result], None]] = None):
+        if scheduler not in ("fcfs", "sjf"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
         self.params = params
         self.cfg = cfg
         self.bs = batch_size
@@ -77,88 +120,243 @@ class ServeEngine:
         self.top_k = top_k
         self.eos_id = eos_id
         self.ctx = ctx or lm_mod.Ctx()
+        self.scheduler = scheduler
+        self.stream = stream
+        self.on_finish = on_finish
         self.rng = jax.random.PRNGKey(seed)
+        self._seed = seed
 
-        self.caches = lm_mod.init_lm_cache(cfg, batch_size, max_len)
-        self.queue: deque = deque()
-        self.slot_req = [None] * batch_size          # type: list
-        self.slot_tokens: list = [[] for _ in range(batch_size)]
-        self.last_token = jnp.zeros((batch_size, 1), jnp.int32)
-        self.active = np.zeros((batch_size,), bool)
-        self.results: dict = {}
+        # Chunked prefill is only engaged when the architecture has an
+        # incremental prefill path; chunk sizes snap to the GSPN fold
+        # width so chunks start at grid-row boundaries (lm.py contract).
+        if prefill_chunk > 0 and lm_mod.supports_chunked_prefill(cfg):
+            align = lm_mod.prefill_chunk_alignment(cfg)
+            self.prefill_chunk = max(align, (prefill_chunk // align) * align)
+        else:
+            self.prefill_chunk = 0
+
+        self.pool = StateCachePool(cfg, batch_size, max_len)
+        self._reset_state()
 
         self._prefill = jax.jit(
             lambda p, toks: lm_mod.lm_prefill(p, cfg, toks, max_len,
                                               ctx=self.ctx)[:2])
+        self._prefill_chunk_fn = jax.jit(
+            lambda p, toks, caches, off, with_logits: lm_mod.lm_prefill_chunk(
+                p, cfg, toks, caches, off, ctx=self.ctx,
+                with_logits=with_logits),
+            static_argnums=4)
         self._decode = jax.jit(self._decode_fn)
+
+    def _reset_state(self):
+        self.waiting: list = []              # [(Request, t_submit)]
+        self._inflight = None                # chunked prefill in progress
+        self.slot_req = [None] * self.bs
+        self._slot_res: list = [None] * self.bs
+        self._slot_t_last = [0.0] * self.bs
+        self.last_token = jnp.zeros((self.bs, 1), jnp.int32)
+        self.active = np.zeros((self.bs,), bool)
+        self.results: dict = {}
+        self.metrics = {"ticks": 0, "decode_steps": 0, "prefill_chunks": 0,
+                        "queue_depth_max": 0, "queue_depth_sum": 0,
+                        "depth_samples": 0,
+                        # bounded: a long-running server must not grow a
+                        # per-request list without limit
+                        "admission_order": collections.deque(maxlen=1024)}
+
+    def reset(self):
+        """Clear all scheduling state (fresh pool pages included) but keep
+        the compiled functions (benchmark rungs reuse one engine to avoid
+        re-jitting)."""
+        self.pool = StateCachePool(self.cfg, self.bs, self.max_len)
+        self.rng = jax.random.PRNGKey(self._seed)
+        self._reset_state()
 
     # -- jitted decode+sample --------------------------------------------
     def _decode_fn(self, params, token, caches, rng):
         logits, new_caches = lm_mod.lm_decode_step(params, self.cfg, token,
                                                    caches, ctx=self.ctx)
-        logits = logits[:, 0].astype(jnp.float32)
-        if self.temperature <= 0.0:
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            logits = logits / self.temperature
-            if self.top_k:
-                vals, _ = jax.lax.top_k(logits, self.top_k)
-                thresh = vals[:, -1:]
-                logits = jnp.where(logits < thresh, -1e30, logits)
-            nxt = jax.random.categorical(rng, logits, axis=-1)
-        return nxt.astype(jnp.int32), new_caches
+        nxt = sample_tokens(logits[:, 0], rng, self.temperature, self.top_k)
+        return nxt, new_caches
 
-    # -- request management ------------------------------------------------
+    # -- request management -------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
+        # Reject oversized requests at the door: past max_len the chunked
+        # prefill would silently clamp its KV writes and the decode step
+        # silently drops K/V (the one_hot blend writes nothing) — wrong
+        # tokens, no error.  Decode writes cache rows up to
+        # prompt + max_new − 2 (the final token is never written).
+        need = len(req.prompt) + max(req.max_new_tokens, 1) - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"prompt ({len(req.prompt)}) + max_new_tokens "
+                f"({req.max_new_tokens}) needs {need} cache rows, exceeding "
+                f"the per-slot capacity max_len={self.max_len}")
+        self.waiting.append((req, time.perf_counter()))
 
-    def _free_slots(self):
-        return [i for i in range(self.bs) if not self.active[i]]
+    def _pop_next(self):
+        if self.scheduler == "sjf":
+            i = min(range(len(self.waiting)),
+                    key=lambda i: len(self.waiting[i][0].prompt))
+        else:
+            i = 0
+        return self.waiting.pop(i)
 
-    def _fill_slots(self):
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.popleft()
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, new_caches = self._prefill(self.params, prompt)
-            first = int(jnp.argmax(logits[0, -1]))
-            self.caches = update_cache_slots(self.cfg, self.caches,
-                                             new_caches, [slot])
-            self.slot_req[slot] = req
-            self.slot_tokens[slot] = [first]
-            self.last_token = self.last_token.at[slot, 0].set(first)
-            self.active[slot] = True
+    def _sample_first(self, logits_row):
+        """Draw a request's first token (from the last prefill logits)
+        under the SAME policy as decode (sample_tokens)."""
+        if self.temperature <= 0.0:
+            sub = self.rng                   # unused; keep the stream fixed
+        else:
+            self.rng, sub = jax.random.split(self.rng)
+        return int(sample_tokens(logits_row[None], sub,
+                                 self.temperature, self.top_k)[0])
 
-    def _retire(self, slot):
-        req = self.slot_req[slot]
-        self.results[req.uid] = Result(req.uid, list(self.slot_tokens[slot]))
+    @property
+    def idle(self) -> bool:
+        """True when nothing is queued, prefilling, or decoding."""
+        return (not self.waiting and self._inflight is None
+                and not self.active.any())
+
+    @property
+    def queue_depth(self) -> int:
+        """Admission-queue depth: requests waiting for a slot.  The
+        in-flight chunked prefill is already admitted (its queue_delay
+        has ended) and is deliberately NOT counted — this is the
+        backpressure signal, not an occupancy count."""
+        return len(self.waiting)
+
+    # -- prefill ------------------------------------------------------------
+    def _admit(self):
+        while self.waiting:
+            if self._inflight is not None:
+                break                        # one chunked prefill at a time
+            slot = self.pool.alloc()
+            if slot is None:
+                break                        # backpressure: batch is full
+            req, t_submit = self._pop_next()
+            t_admit = time.perf_counter()
+            self.metrics["admission_order"].append(req.uid)
+            if self.prefill_chunk and len(req.prompt) > self.prefill_chunk:
+                # A fresh zeroed batch-1 cache per admission (once per
+                # request, not per chunk).  Reusing a persistent scratch
+                # would need leaf-selective resets — a stale GSPN
+                # prev_row corrupts the seeded scan — for one saved
+                # zero-fill; not worth the foot-gun.
+                self._inflight = {
+                    "req": req, "slot": slot, "off": 0, "chunks": 0,
+                    "toks": np.asarray(req.prompt, np.int32),
+                    "cache": lm_mod.init_lm_cache(self.cfg, 1, self.max_len),
+                    "t_submit": t_submit, "t_admit": t_admit,
+                }
+            else:
+                prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, new_caches = self._prefill(self.params, prompt)
+                first = self._sample_first(logits[0, -1])
+                self.pool.commit(slot, new_caches)
+                self._activate(req, slot, first, t_submit, t_admit, 0)
+
+    def _advance_prefill(self):
+        """Run at most one prompt chunk of the in-flight prefill."""
+        st = self._inflight
+        if st is None:
+            return
+        off = st["off"]
+        end = min(off + self.prefill_chunk, len(st["toks"]))
+        last = end == len(st["toks"])
+        chunk = jnp.asarray(st["toks"][off:end], jnp.int32)[None]
+        # only the final chunk's logits feed sampling; intermediate chunks
+        # skip the vocab-head projection entirely
+        logits, st["cache"] = self._prefill_chunk_fn(
+            self.params, chunk, st["cache"], jnp.asarray(off, jnp.int32),
+            last)
+        st["off"] = end
+        st["chunks"] += 1
+        self.metrics["prefill_chunks"] += 1
+        if last:
+            first = self._sample_first(logits[0, -1])
+            self.pool.commit(st["slot"], st["cache"])
+            self._activate(st["req"], st["slot"], first,
+                           st["t_submit"], st["t_admit"], st["chunks"])
+            self._inflight = None
+
+    def _activate(self, req, slot, first, t_submit, t_admit, chunks):
+        now = time.perf_counter()
+        res = Result(uid=req.uid, tokens=[first], ttft=now - t_submit,
+                     queue_delay=t_admit - t_submit, prefill_chunks=chunks)
+        self.slot_req[slot] = req
+        self._slot_res[slot] = res
+        self._slot_t_last[slot] = now
+        self.last_token = self.last_token.at[slot, 0].set(first)
+        self.active[slot] = True
+        if self.stream:
+            self.stream(req.uid, first)
+        if self.eos_id is not None and first == self.eos_id:
+            self._retire(slot, "eos")
+        elif req.max_new_tokens <= 1:
+            self._retire(slot, "length")
+
+    # -- decode / retirement ------------------------------------------------
+    def _retire(self, slot, reason: str):
+        res = self._slot_res[slot]
+        res.finish_reason = reason
+        if self.on_finish is not None:
+            # long-running front-ends consume results here; nothing is
+            # retained engine-side, so state stays bounded
+            self.on_finish(res)
+        else:
+            self.results[res.uid] = res
         self.slot_req[slot] = None
+        self._slot_res[slot] = None
         self.active[slot] = False
+        self.pool.free(slot)
 
-    # -- main loop ----------------------------------------------------------
-    def step(self):
+    def _decode_step(self):
         """One decode step for the whole batch."""
         self.rng, sub = jax.random.split(self.rng)
-        nxt, self.caches = self._decode(self.params, self.last_token,
-                                        self.caches, sub)
+        nxt, new_caches = self._decode(self.params, self.last_token,
+                                       self.pool.caches, sub)
+        self.pool.update(new_caches)
+        self.metrics["decode_steps"] += 1
         nxt_host = np.asarray(nxt)
         self.last_token = nxt[:, None]
+        now = time.perf_counter()
         for slot in range(self.bs):
             if not self.active[slot]:
                 continue
             tok = int(nxt_host[slot])
-            self.slot_tokens[slot].append(tok)
+            res = self._slot_res[slot]
+            res.tokens.append(tok)
+            res.itl.append(now - self._slot_t_last[slot])
+            self._slot_t_last[slot] = now
+            if self.stream:
+                self.stream(res.uid, tok)
             req = self.slot_req[slot]
-            done = (self.eos_id is not None and tok == self.eos_id) or \
-                len(self.slot_tokens[slot]) >= req.max_new_tokens
-            if done:
-                self._retire(slot)
+            if self.eos_id is not None and tok == self.eos_id:
+                self._retire(slot, "eos")
+            elif len(res.tokens) >= req.max_new_tokens:
+                self._retire(slot, "length")
+
+    # -- main loop ----------------------------------------------------------
+    def tick(self):
+        """One scheduling quantum: admit, one prefill chunk, one decode
+        step.  Drivers interleave ``submit``/``tick`` to model arrivals."""
+        self.metrics["ticks"] += 1
+        depth = self.queue_depth
+        self.metrics["queue_depth_max"] = max(
+            self.metrics["queue_depth_max"], depth)
+        self.metrics["queue_depth_sum"] += depth
+        self.metrics["depth_samples"] += 1
+        self._admit()
+        self._advance_prefill()
+        if self.active.any():
+            self._decode_step()
+
+    # kept as an alias of the scheduling quantum for older callers
+    step = tick
 
     def run(self):
         """Run until all submitted requests complete.  Returns results."""
-        while self.queue or self.active.any():
-            self._fill_slots()
-            if self.active.any():
-                self.step()
+        while not self.idle:
+            self.tick()
         return self.results

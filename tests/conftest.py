@@ -32,6 +32,10 @@ def pytest_configure(config):
         "markers",
         "distributed: multi-device behaviour on 8 forced host-platform CPU "
         "devices in subprocesses — no TPUs needed (pytest -m distributed)")
+    config.addinivalue_line(
+        "markers",
+        "serve: continuous-batching engine / chunked-prefill / cache-pool "
+        "tests on tiny configs (pytest -m serve)")
 
 
 @pytest.fixture(scope="session", autouse=True)

@@ -1,0 +1,28 @@
+"""Documentation invariants: every `DESIGN.md §N` citation in the code
+resolves to a real section heading (the contract DESIGN.md's preamble
+promises the re-anchoring loop)."""
+
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_design_citations_resolve():
+    sections = set(re.findall(r"^## §(\d+)", (ROOT / "DESIGN.md")
+                              .read_text(), flags=re.M))
+    assert sections, "DESIGN.md has no §-numbered sections"
+    bad = []
+    skip_dirs = {".git", ".venv", "venv", "build", "dist", "node_modules",
+                 "__pycache__", ".claude"}
+    for path in ROOT.rglob("*.py"):
+        if skip_dirs & set(path.parts):
+            continue
+        for n in re.findall(r"DESIGN\.md §(\d+)", path.read_text()):
+            if n not in sections:
+                bad.append((str(path.relative_to(ROOT)), f"§{n}"))
+    for name in ("README.md", "ROADMAP.md", "CHANGES.md"):
+        for n in re.findall(r"DESIGN\.md §(\d+)", (ROOT / name).read_text()):
+            if n not in sections:
+                bad.append((name, f"§{n}"))
+    assert not bad, f"unresolved DESIGN.md citations: {bad}"

@@ -3,9 +3,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models.lm import LMConfig, apply_lm, init_lm
 from repro.serve.engine import Request, ServeEngine
+
+pytestmark = pytest.mark.serve
 
 
 def _cfg():
