@@ -36,7 +36,7 @@ def run():
     t0 = time_fn(
         lambda: R.gspn_scan_per_step(x, wl, wc, wr, lam, block=True),
         iters=2)
-    emit("fig3/gspn1_per_step_ms", t0 * 1e6, f"cum_speedup=1.00")
+    emit("fig3/gspn1_per_step_ms", t0 * 1e6, "cum_speedup=1.00")
 
     # Stage 1: fused scan, but strided layout (scan over the CONTIGUOUS
     # axis => vector ops hit strided memory, like GSPN-1's accesses).

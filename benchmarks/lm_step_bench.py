@@ -1,10 +1,8 @@
 """Framework overhead: per-arch reduced-config train-step throughput on
 CPU (tokens/s) — one row per assigned architecture."""
 
-import functools
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.configs.all_archs import ASSIGNED, EXTRAS

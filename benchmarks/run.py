@@ -2,13 +2,18 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3,table1,...] [--smoke]
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,table1,...] \
+        [--smoke] [--json out.json]
 
 ``--smoke`` runs every rung with a single timed iteration — a cheap CI
 gate that exercises all benchmark code paths without meaningful timings.
+``--json`` additionally writes the emitted rows (plus smoke/only
+metadata) to a file — the artifact CI uploads per push so the perf
+trajectory survives across PRs.
 """
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -16,6 +21,7 @@ MODULES = [
     ("fig3", "benchmarks.fig3_kernel_ladder"),
     ("multidir", "benchmarks.multidir_ladder"),
     ("sp", "benchmarks.sp_scaling"),
+    ("dtype", "benchmarks.dtype_ladder"),
     ("table1", "benchmarks.table1_throughput"),
     ("fig4", "benchmarks.fig4_scaling"),
     ("table2", "benchmarks.table2_imagenet"),
@@ -30,10 +36,12 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--smoke", action="store_true",
                     help="1 timed iteration per rung (CI smoke gate)")
+    ap.add_argument("--json", default="",
+                    help="also write rows to this JSON file (CI artifact)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    import benchmarks.common as common
     if args.smoke:
-        import benchmarks.common as common
         common.SMOKE = True
 
     print("name,us_per_call,derived")
@@ -48,6 +56,19 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             failed.append(key)
             traceback.print_exc()
+
+    if args.json:
+        rows = []
+        for line in common.ROWS:
+            name, us, derived = line.split(",", 2)
+            rows.append({"name": name, "us_per_call": float(us),
+                         "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "only": sorted(only or []),
+                       "failed": failed, "rows": rows}, f, indent=1)
+        print(f"[run] wrote {len(rows)} rows to {args.json}",
+              file=sys.stderr)
+
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -5,11 +5,9 @@ on synthetic class-conditional images; accuracy climbs well above chance.
 """
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.gspn2_vision import reduced_vision
 from repro.data.pipeline import DataConfig, synth_images

@@ -1,20 +1,101 @@
-"""Config registry and input-shape catalogue.
+"""Config registry, input-shape catalogue, and the mixed-precision policy.
 
 Every assigned architecture registers a ``full(n_model_shards)`` LMConfig
 (the exact published dims) and a ``reduced()`` config of the same family
 for CPU smoke tests.  ``input_specs`` builds ShapeDtypeStruct stand-ins for
 every (arch × shape) dry-run cell without allocating anything.
+
+The :class:`Precision` policy (DESIGN.md §10) is the single source of
+truth for how dtypes thread through the stack: ``param_dtype`` (storage),
+``compute_dtype`` (matmuls and streamed scan operands) and ``carry_dtype``
+(scan carries / boundary compositions / accumulators).  The default
+production policy is bf16/bf16/f32 — the FlashAttention-2 recipe of
+low-precision streamed operands with f32 accumulators, applied to the
+GSPN carry rows.  ``with_precision`` rewrites any LMConfig to a policy;
+launchers accept the preset names in :data:`PRECISIONS`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.lm import LMConfig
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision policy (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+DTYPES = {
+    "f32": jnp.float32, "float32": jnp.float32, "fp32": jnp.float32,
+    "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+}
+
+
+def resolve_dtype(name: Union[str, Any]):
+    """Map a CLI/config dtype name ("f32", "bf16", ...) to a jnp dtype;
+    dtype-like objects pass through."""
+    if isinstance(name, str):
+        try:
+            return DTYPES[name.lower()]
+        except KeyError:
+            raise ValueError(
+                f"unknown dtype {name!r}; expected one of {sorted(DTYPES)}")
+    return name
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """End-to-end dtype policy: params / streamed compute / carries.
+
+    The default is the production mixed policy — bf16 storage and streams,
+    f32 for everything that integrates over the sequence (scan carries,
+    sp boundary composition, softmax/loss reductions).  Carries must not
+    narrow with the streams: the scan is a long dependent product, and
+    bf16's 8 mantissa bits lose the Stability–Context non-expansiveness
+    guarantee to accumulated rounding (DESIGN.md §10).
+    """
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    carry_dtype: Any = jnp.float32
+
+
+PRECISIONS: Dict[str, Precision] = {
+    # full f32 — the validation/numerics-oracle policy
+    "f32": Precision(jnp.float32, jnp.float32, jnp.float32),
+    # production default: bf16 streams, f32 carries
+    "bf16": Precision(),
+    # bf16 compute over f32 master-ish params (no train master copy
+    # needed; params stay f32, casts happen at use)
+    "bf16_f32params": Precision(jnp.float32, jnp.bfloat16, jnp.float32),
+}
+
+
+def resolve_precision(p: Union[str, Precision]) -> Precision:
+    if isinstance(p, str):
+        try:
+            return PRECISIONS[p]
+        except KeyError:
+            raise ValueError(f"unknown precision preset {p!r}; "
+                             f"expected one of {sorted(PRECISIONS)}")
+    return p
+
+
+def with_precision(cfg: LMConfig, precision: Union[str, Precision]) -> LMConfig:
+    """Rewrite an LMConfig to a mixed-precision policy: parameter storage,
+    attention/FFN compute, the GSPN mixer's streamed compute, and the scan
+    carry dtype all follow the policy (DESIGN.md §10)."""
+    p = resolve_precision(precision)
+    return dataclasses.replace(
+        cfg,
+        param_dtype=resolve_dtype(p.param_dtype),
+        compute_dtype=resolve_dtype(p.compute_dtype),
+        gspn_compute_dtype=resolve_dtype(p.compute_dtype),
+        carry_dtype=resolve_dtype(p.carry_dtype))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -5,7 +5,7 @@ up/down projections (expand=2), so d_ff=0 (no separate FFN) is faithful.
 Pattern: 7 mLSTM + 1 sLSTM per unit × 6 units = 48 layers.
 """
 
-from repro.configs.base import (ArchEntry, register, SHAPES)
+from repro.configs.base import ArchEntry, register
 from repro.models.lm import LMConfig
 
 

@@ -195,6 +195,13 @@ class GSPNAttentionConfig:
     seq_axis: str = "seq"          # mesh axis for impl="sp" (DESIGN.md §8)
     sp_strategy: str = "auto"      # boundary-exchange strategy for impl="sp"
     param_dtype: jnp.dtype = jnp.float32
+    # Mixed-precision policy (DESIGN.md §10): projections and streamed
+    # scan operands run in compute_dtype; tap softmax, scan carries and
+    # the decode cache stay f32.  boundary_dtype is the sp exchange
+    # payload (None → compute_dtype); composition is always f32.
+    compute_dtype: jnp.dtype = jnp.float32
+    carry_dtype: jnp.dtype = jnp.float32
+    boundary_dtype: jnp.dtype | None = None
 
 
 def _dense_init(key, d_in, d_out, dtype):
@@ -233,6 +240,15 @@ def _normalize_taps_oriented(logits, direction: str, mode: str):
     return normalize_taps(logits, mode)
 
 
+def _scan_precision_kwargs(cfg):
+    """The dtype legs of ``scan_kwargs`` shared by the attention module
+    and the sequence mixer (DESIGN.md §10)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    bd = cfg.boundary_dtype if cfg.boundary_dtype is not None else cd
+    return dict(carry_dtype=str(jnp.dtype(cfg.carry_dtype)),
+                sp_boundary_dtype=jnp.dtype(bd))
+
+
 def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig, *, mesh=None):
     """x: (B, H, W, C) -> (B, H, W, C).
 
@@ -241,15 +257,18 @@ def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig, *, mesh=None):
     four-direction pass dispatches two fused scans (DESIGN.md §2).
     ``mesh`` is only consulted by ``impl="sp"``, which shards each
     direction's scan dimension over ``cfg.seq_axis`` (DESIGN.md §8).
+    Projections and scan streams run in ``cfg.compute_dtype``; the tap
+    softmax and the output accumulation stay f32 (DESIGN.md §10).
     """
     b, h, w, c = x.shape
     cp = cfg.proxy_dim
-    xf = x.astype(jnp.float32)
+    cd = jnp.dtype(cfg.compute_dtype)
+    xf = x.astype(cd)
 
-    x_p = xf @ params["down"].astype(jnp.float32)          # (B,H,W,Cp)
-    taps = xf @ params["w_taps"].astype(jnp.float32)       # (B,H,W,3*nd[*Cp])
-    lam = jax.nn.sigmoid(xf @ params["w_lam"].astype(jnp.float32))
-    u = xf @ params["w_u"].astype(jnp.float32)             # (B,H,W,nd*Cp)
+    x_p = xf @ params["down"].astype(cd)                   # (B,H,W,Cp)
+    taps = xf @ params["w_taps"].astype(cd)                # (B,H,W,3*nd[*Cp])
+    lam = jax.nn.sigmoid(xf @ params["w_lam"].astype(cd))
+    u = xf @ params["w_u"].astype(cd)                      # (B,H,W,nd*Cp)
 
     # (B, Cp, H, W) -> (B*Cp, H, W): channel-major grouping so that
     # channels_per_weight = Cp matches the kernel's index_map convention.
@@ -267,9 +286,12 @@ def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig, *, mesh=None):
             tap_d = jnp.moveaxis(tap_d, 3, 1).reshape(b * cp, h, w, 3)
         wl, wc_, wr = _normalize_taps_oriented(tap_d, direction,
                                                cfg.norm_mode)
-        wls.append(wl)
-        wcs.append(wc_)
-        wrs.append(wr)
+        # Tap softmax runs in f32; the normalised taps are then streamed
+        # to the kernels in compute_dtype (row sums survive the rounding
+        # to within one ulp — the scan stays non-expansive in practice).
+        wls.append(wl.astype(cd))
+        wcs.append(wc_.astype(cd))
+        wrs.append(wr.astype(cd))
         lams.append(to_scan(lam[..., cp * d_idx:cp * (d_idx + 1)], cp))
 
     h_all = directional_scan(
@@ -277,14 +299,17 @@ def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig, *, mesh=None):
         jnp.stack(lams), cfg.directions,
         chunk=cfg.chunk, impl=cfg.impl,
         mesh=mesh, seq_axis=cfg.seq_axis, sp_strategy=cfg.sp_strategy,
+        **_scan_precision_kwargs(cfg),
     )                                                      # (D, B*Cp, H, W)
 
+    # Directional merge accumulates in f32 whatever the stream dtype.
     out = jnp.zeros((b, h, w, cp), jnp.float32)
     for d_idx in range(len(cfg.directions)):
         h_d = jnp.moveaxis(h_all[d_idx].reshape(b, cp, h, w), 1, -1)
-        out = out + u[..., cp * d_idx:cp * (d_idx + 1)] * h_d
+        out = out + (u[..., cp * d_idx:cp * (d_idx + 1)]
+                     * h_d).astype(jnp.float32)
 
-    y = out @ params["up"].astype(jnp.float32)
+    y = out.astype(cd) @ params["up"].astype(cd)
     return y.astype(x.dtype)
 
 
@@ -311,6 +336,11 @@ class GSPNSeqConfig:
     seq_axis: str = "seq"          # mesh axis for impl="sp" (DESIGN.md §8)
     sp_strategy: str = "auto"
     param_dtype: jnp.dtype = jnp.float32
+    # Mixed-precision policy (DESIGN.md §10) — same legs as the attention
+    # module: compute_dtype streams, f32 tap softmax / carries / cache.
+    compute_dtype: jnp.dtype = jnp.float32
+    carry_dtype: jnp.dtype = jnp.float32
+    boundary_dtype: jnp.dtype | None = None
 
 
 def init_gspn_seq_mixer(key, cfg: GSPNSeqConfig):
@@ -334,12 +364,14 @@ def _fold_len(l: int, row_width: int) -> tuple[int, int]:
 
 def _seq_mixer_projections(params, xf):
     """Per-token projections shared by the one-shot and chunked paths.
-    xf: (B, L, D) f32.  Returns (x_p, taps, row_g, lam, u)."""
-    x_p = xf @ params["down"].astype(jnp.float32)            # (B,L,Cp)
-    taps = xf @ params["w_taps"].astype(jnp.float32)         # (B,L,3)
-    row_g = jax.nn.sigmoid(xf @ params["w_row"].astype(jnp.float32))
-    lam = jax.nn.sigmoid(xf @ params["w_lam"].astype(jnp.float32))
-    u = xf @ params["w_u"].astype(jnp.float32)
+    xf: (B, L, D) in the policy's compute dtype (f32 by default).
+    Returns (x_p, taps, row_g, lam, u), all in xf.dtype."""
+    cd = xf.dtype
+    x_p = xf @ params["down"].astype(cd)                     # (B,L,Cp)
+    taps = xf @ params["w_taps"].astype(cd)                  # (B,L,3)
+    row_g = jax.nn.sigmoid(xf @ params["w_row"].astype(cd))
+    lam = jax.nn.sigmoid(xf @ params["w_lam"].astype(cd))
+    u = xf @ params["w_u"].astype(cd)
     return x_p, taps, row_g, lam, u
 
 
@@ -363,13 +395,14 @@ def _fold_ops(b, h, w, l):
     return fold, unfold
 
 
-def _tb_taps(taps, fold, b, h, w, mode):
+def _tb_taps(taps, fold, b, h, w, mode, dtype=jnp.float32):
     """Row-stochastic T→B tap weights from per-token logits (B, L, 3):
     fold to the grid, regroup the 3 taps innermost, and normalise.
-    Shared by the one-shot and chunked paths."""
+    Shared by the one-shot and chunked paths.  The softmax itself runs in
+    f32 (normalize_taps); ``dtype`` is the streamed output dtype."""
     wl, wc, wr = normalize_taps(
         fold(taps).reshape(b, 3, h, w).transpose(0, 2, 3, 1), mode)
-    return wl, wc, wr
+    return wl.astype(dtype), wc.astype(dtype), wr.astype(dtype)
 
 
 def _within_row_pass(x_p, row_g, lam_hi, b, l, fold, scan_kwargs):
@@ -429,16 +462,18 @@ def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
     b, l, d = x.shape
     cp = cfg.proxy_dim
     h, w = _fold_len(l, cfg.row_width)
-    xf = x.astype(jnp.float32)
+    cd = jnp.dtype(cfg.compute_dtype)
+    xf = x.astype(cd)
 
     x_p, taps, row_g, lam, u = _seq_mixer_projections(params, xf)
     fold, unfold = _fold_ops(b, h, w, l)
 
     scan_kwargs = dict(impl=cfg.impl, mesh=mesh, seq_axis=cfg.seq_axis,
-                       sp_strategy=cfg.sp_strategy)
+                       sp_strategy=cfg.sp_strategy,
+                       **_scan_precision_kwargs(cfg))
 
     # Pass 1: causal T->B 2D scan in proxy space, channel-shared taps.
-    wl, wc_, wr = _tb_taps(taps, fold, b, h, w, cfg.norm_mode)
+    wl, wc_, wr = _tb_taps(taps, fold, b, h, w, cfg.norm_mode, dtype=cd)
     h_tb = gspn_scan(fold(x_p), wl, wc_, wr,
                      fold(lam[..., :cp]), **scan_kwargs)
 
@@ -447,7 +482,7 @@ def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
                              scan_kwargs)
 
     y = (unfold(h_tb, cp) * u[..., :cp] + unfold(h_row, cp) * u[..., cp:])
-    y = y @ params["up"].astype(jnp.float32)
+    y = y @ params["up"].astype(cd)
     y = y.astype(x.dtype)
     if not return_cache:
         return y
@@ -495,23 +530,28 @@ def gspn_seq_prefill_chunk(params, x, cfg: GSPNSeqConfig, cache, *,
             "derives the fold from the total length, which a chunked "
             "caller does not know)")
     hc = -(-t // w)
-    xf = x.astype(jnp.float32)
+    cd = jnp.dtype(cfg.compute_dtype)
+    xf = x.astype(cd)
 
     x_p, taps, row_g, lam, u = _seq_mixer_projections(params, xf)
     fold, unfold = _fold_ops(b, hc, w, t)
 
     scan_kwargs = dict(impl=cfg.impl, mesh=mesh, seq_axis=cfg.seq_axis,
-                       sp_strategy=cfg.sp_strategy)
+                       sp_strategy=cfg.sp_strategy,
+                       **_scan_precision_kwargs(cfg))
 
     # Pass 1: T->B scan seeded with the incoming boundary row.  Row 0 of
     # the seeded grid carries prev_row (λ=1, taps=0 ⇒ h[0] = prev_row);
     # the chunk's real rows then see the correct cross-chunk neighbour.
-    wl, wc_, wr = _tb_taps(taps, fold, b, hc, w, cfg.norm_mode)
-    ztap = jnp.zeros((b, 1, w), jnp.float32)
+    # The f32 cached boundary is rounded to the stream dtype here — the
+    # one bounded cross-chunk rounding the §10 error budget accounts for.
+    wl, wc_, wr = _tb_taps(taps, fold, b, hc, w, cfg.norm_mode, dtype=cd)
+    ztap = jnp.zeros((b, 1, w), cd)
     x_tb = jnp.concatenate(
-        [cache["prev_row"].reshape(b * cp, 1, w), fold(x_p)], axis=1)
+        [cache["prev_row"].astype(cd).reshape(b * cp, 1, w), fold(x_p)],
+        axis=1)
     lam_tb = jnp.concatenate(
-        [jnp.ones((b * cp, 1, w), jnp.float32), fold(lam[..., :cp])], axis=1)
+        [jnp.ones((b * cp, 1, w), cd), fold(lam[..., :cp])], axis=1)
     h_tb = gspn_scan(x_tb,
                      jnp.concatenate([ztap, wl], axis=1),
                      jnp.concatenate([ztap, wc_], axis=1),
@@ -524,7 +564,7 @@ def gspn_seq_prefill_chunk(params, x, cfg: GSPNSeqConfig, cache, *,
                              scan_kwargs)
 
     y = (unfold(h_tb, cp) * u[..., :cp] + unfold(h_row, cp) * u[..., cp:])
-    y = (y @ params["up"].astype(jnp.float32)).astype(x.dtype)
+    y = (y @ params["up"].astype(cd)).astype(x.dtype)
 
     # Slice the outgoing boundary state — same construction as the
     # one-shot cache, with the incoming prev_row standing in when the

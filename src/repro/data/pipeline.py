@@ -13,10 +13,8 @@ learnable structure (losses fall during the examples' training runs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

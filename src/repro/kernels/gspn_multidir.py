@@ -47,11 +47,15 @@ from repro.kernels.gspn_scan import (DEFAULT_ROW_TILE, CompilerParams, _row,
 from repro.kernels.tuning import pick_row_tile as _pick_tile
 
 
-def _pair_row_tile(h: int, w: int, dtype_bytes: int, n_streams: int) -> int:
+def _pair_row_tile(h: int, w: int, dtype_bytes: int, n_streams: int,
+                   carry_dtype_bytes: int = 4) -> int:
     """VMEM-aware tile for the fused pair kernels (DESIGN.md §2); shares
-    the single-direction kernels' cap so fused/unfused tile identically."""
+    the single-direction kernels' cap so fused/unfused tile identically.
+    ``dtype_bytes`` is the streamed dtype (bf16 halves the working set);
+    ``carry_dtype_bytes`` the VMEM carry's."""
     return _pick_tile(h, w, dtype_bytes, cap=DEFAULT_ROW_TILE,
-                      n_streams=n_streams).row_tile
+                      n_streams=n_streams,
+                      carry_dtype_bytes=carry_dtype_bytes).row_tile
 
 
 # ---------------------------------------------------------------------------
@@ -79,17 +83,24 @@ def _kernel(row_tile,
         o_ref[0, pl.dslice(r_eff, 1), :] = h_new.astype(o_ref.dtype)
         return h_new
 
-    carry_ref[...] = jax.lax.fori_loop(0, row_tile, body, carry_ref[...])
+    # f32 row recurrence; cross-tile carry stored in the scratch's dtype.
+    carry_ref[...] = jax.lax.fori_loop(
+        0, row_tile, body,
+        carry_ref[...].astype(jnp.float32)).astype(carry_ref.dtype)
 
 
 def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
                            row_tile: int | None = None,
-                           interpret: bool = True):
+                           interpret: bool = True,
+                           carry_dtype=jnp.float32):
     """x: (G, H, W); taps: dict with wl/wc/wr each (2, G_w, H, W);
-    lam2: (2, G, H, W).  Returns (2, G, H, W) — both directional scans."""
+    lam2: (2, G, H, W).  Returns (2, G, H, W) — both directional scans.
+    Streams in the operands' dtype, carries in ``carry_dtype``."""
     g, h, w = x.shape
     cpw = channels_per_weight
-    row_tile = row_tile or _pair_row_tile(h, w, x.dtype.itemsize, 6)
+    carry_dtype = jnp.dtype(carry_dtype)
+    row_tile = row_tile or _pair_row_tile(
+        h, w, x.dtype.itemsize, 6, carry_dtype_bytes=carry_dtype.itemsize)
     assert h % row_tile == 0
     n_tiles = h // row_tile
 
@@ -117,7 +128,7 @@ def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
         in_specs=[x_spec, wt_spec, wt_spec, wt_spec, lam_spec],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((2, g, h, w), x.dtype),
-        scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",) * 3),
         interpret=interpret,
@@ -174,7 +185,10 @@ def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
     copies."""
     _, g_dim, h, w = dy2.shape
     cpw = channels_per_weight
-    row_tile = row_tile or _pair_row_tile(h, w, 4, 5)
+    # Streamed dtype is dy2's (bf16 tiles halve the working set); the
+    # adjoint carry is three f32 tap·adjoint rows regardless of policy.
+    row_tile = row_tile or _pair_row_tile(h, w, dy2.dtype.itemsize, 5,
+                                          carry_dtype_bytes=3 * 4)
     assert h % row_tile == 0
     n_tiles = h // row_tile
 
@@ -211,7 +225,8 @@ def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
 
 def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
                           row_tile: int | None = None,
-                          interpret: bool = True):
+                          interpret: bool = True,
+                          carry_dtype=jnp.float32):
     """All four directions in ONE ``pallas_call`` (square H == W only).
 
     x: (G, N, N).  taps4: dict wl/wc/wr each (4, G_w, N, N); lam4:
@@ -229,7 +244,9 @@ def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
     g, h, w = x.shape
     assert h == w, "quad single-launch dispatch requires a square grid"
     cpw = channels_per_weight
-    row_tile = row_tile or _pair_row_tile(h, w, x.dtype.itemsize, 6)
+    carry_dtype = jnp.dtype(carry_dtype)
+    row_tile = row_tile or _pair_row_tile(
+        h, w, x.dtype.itemsize, 6, carry_dtype_bytes=carry_dtype.itemsize)
     assert h % row_tile == 0
     n_tiles = h // row_tile
 
@@ -258,7 +275,7 @@ def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
         in_specs=[xx_spec, wt_spec, wt_spec, wt_spec, lam_spec],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((4, g, h, w), x.dtype),
-        scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",) * 3),
         interpret=interpret,

@@ -20,7 +20,11 @@ TPU adaptation of the paper's single-CUDA-kernel design (DESIGN.md §2):
 
 Array layout: ``x, lam, out: (G, H, W)``; ``wl, wc, wr: (G_w, H, W)`` with
 ``G = G_w * channels_per_weight``.  All kernels compute in f32 and cast the
-output back to the input dtype.
+output back to the input dtype; the VMEM carry row is kept in
+``carry_dtype`` (f32 under the default mixed-precision policy, DESIGN.md
+§10) while the streamed tiles take whatever dtype the operands carry, so
+bf16 operands halve the streamed working set and unlock 2× larger row
+tiles from the tuner.
 """
 
 from __future__ import annotations
@@ -42,16 +46,19 @@ DEFAULT_ROW_TILE = 256
 
 
 def pick_row_tile(h: int, cap: int = DEFAULT_ROW_TILE, *, w: int = 128,
-                  dtype_bytes: int = 4, n_streams: int = 6) -> int:
+                  dtype_bytes: int = 4, n_streams: int = 6,
+                  carry_dtype_bytes: int = 4) -> int:
     """Row-tile choice for the fused scan kernels.
 
     Thin wrapper (old signature preserved) over the single VMEM-aware
     implementation in :func:`repro.kernels.tuning.pick_row_tile`: largest
     power-of-two divisor of ``h`` not exceeding ``cap`` whose streamed
-    working set fits the VMEM budget.
+    working set fits the VMEM budget.  ``dtype_bytes`` is the STREAMED
+    dtype; ``carry_dtype_bytes`` the VMEM carry's.
     """
     return tuning.pick_row_tile(h, w, dtype_bytes, cap=cap,
-                                n_streams=n_streams).row_tile
+                                n_streams=n_streams,
+                                carry_dtype_bytes=carry_dtype_bytes).row_tile
 
 
 def _row(ref, r):
@@ -95,20 +102,31 @@ def _fwd_kernel(row_tile, chunk_tiles,
         o_ref[0, pl.dslice(r, 1), :] = h_new.astype(o_ref.dtype)
         return h_new
 
-    carry_ref[...] = jax.lax.fori_loop(0, row_tile, body, carry_ref[...])
+    # The row recurrence runs in f32 regardless of the streamed dtype; the
+    # cross-tile carry is stored in the scratch's dtype (carry_dtype).
+    carry_ref[...] = jax.lax.fori_loop(
+        0, row_tile, body,
+        carry_ref[...].astype(jnp.float32)).astype(carry_ref.dtype)
 
 
 def gspn_scan_fwd_pallas(x, wl, wc, wr, lam, *, channels_per_weight: int = 1,
                          chunk: int | None = None, row_tile: int | None = None,
-                         interpret: bool = True):
-    """Fused forward line scan.  Returns h: (G, H, W) in x.dtype."""
+                         interpret: bool = True, carry_dtype=jnp.float32):
+    """Fused forward line scan.  Returns h: (G, H, W) in x.dtype.
+
+    Streamed tiles take the operands' dtype; the VMEM carry row persists
+    in ``carry_dtype`` (f32 by default — the mixed-precision policy's
+    accumulator discipline, DESIGN.md §10).
+    """
     g, h, w = x.shape
     cpw = channels_per_weight
     assert wl.shape[0] * cpw == g, (wl.shape, g, cpw)
     chunk = h if chunk is None else chunk
     assert h % chunk == 0, (h, chunk)
-    row_tile = row_tile or pick_row_tile(min(h, chunk), w=w,
-                                         dtype_bytes=x.dtype.itemsize)
+    carry_dtype = jnp.dtype(carry_dtype)
+    row_tile = row_tile or pick_row_tile(
+        min(h, chunk), w=w, dtype_bytes=x.dtype.itemsize,
+        carry_dtype_bytes=carry_dtype.itemsize)
     assert chunk % row_tile == 0, (chunk, row_tile)
     chunk_tiles = chunk // row_tile
 
@@ -121,7 +139,7 @@ def gspn_scan_fwd_pallas(x, wl, wc, wr, lam, *, channels_per_weight: int = 1,
         in_specs=[data_spec, wt_spec, wt_spec, wt_spec, data_spec],
         out_specs=data_spec,
         out_shape=jax.ShapeDtypeStruct((g, h, w), x.dtype),
-        scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
@@ -175,8 +193,13 @@ def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, channels_per_weight: int = 1,
     cpw = channels_per_weight
     chunk = h if chunk is None else chunk
     assert h % chunk == 0, (h, chunk)
+    # The streamed operands are dy + the three taps (their real dtype —
+    # bf16 streams unlock 2× larger row tiles); the adjoint carry is three
+    # f32 tap·adjoint rows regardless of the policy.
     row_tile = row_tile or pick_row_tile(min(h, chunk), w=w,
-                                         dtype_bytes=4, n_streams=5)
+                                         dtype_bytes=dy.dtype.itemsize,
+                                         n_streams=5,
+                                         carry_dtype_bytes=3 * 4)
     chunk_tiles = chunk // row_tile
 
     dy_f = jnp.flip(dy, axis=1)

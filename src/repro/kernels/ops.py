@@ -51,6 +51,10 @@ class ScanConfig:
     channels_per_weight: int = 1
     row_tile: int | None = None
     interpret: bool = True
+    # Mixed-precision policy (DESIGN.md §10): streamed tiles take the
+    # operands' dtype; the VMEM carry row persists in carry_dtype.  Must
+    # stay hashable — ScanConfig is a nondiff custom_vjp argument.
+    carry_dtype: str = "float32"
 
 
 def _resolve_impl(impl: str) -> str:
@@ -80,7 +84,8 @@ def _fwd_dispatch(cfg: ScanConfig, x, wl, wc, wr, lam):
         return _pk.gspn_scan_fwd_pallas(
             x, wl, wc, wr, lam,
             channels_per_weight=cfg.channels_per_weight,
-            row_tile=cfg.row_tile, interpret=cfg.interpret)
+            row_tile=cfg.row_tile, interpret=cfg.interpret,
+            carry_dtype=jnp.dtype(cfg.carry_dtype))
     if impl == "xla":
         return _ref.gspn_scan_ref(x, wl, wc, wr, lam)
     if impl == "per_step":
@@ -162,19 +167,22 @@ _gspn_core.defvjp(_gspn_core_fwd, _gspn_core_bwd)
 def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
               impl: str = "auto", row_tile: int | None = None,
               interpret: bool = True, mesh=None, seq_axis: str = "seq",
-              sp_strategy: str = "auto"):
+              sp_strategy: str = "auto", carry_dtype="float32",
+              sp_boundary_dtype=None):
     """GSPN line scan with optional GSPN-local chunking.
 
     x, lam: (G, H, W); wl/wc/wr: (G_w, H, W), G_w divides G.
     Returns h: (G, H, W) in x.dtype.  Differentiable in all tensor args.
-    ``mesh``/``seq_axis``/``sp_strategy`` only apply to ``impl="sp"``.
+    ``mesh``/``seq_axis``/``sp_strategy``/``sp_boundary_dtype`` only apply
+    to ``impl="sp"``.  ``carry_dtype`` is the fused kernels' VMEM carry
+    dtype (f32 under the default policy, DESIGN.md §10).
     """
     if impl == "sp":
         from repro.parallel.gspn_sp import gspn_scan_sp
         return gspn_scan_sp(x, wl, wc, wr, lam, mesh=mesh,
                             axis_name=seq_axis, strategy=sp_strategy,
                             row_tile=row_tile, interpret=interpret,
-                            chunk=chunk)
+                            chunk=chunk, boundary_dtype=sp_boundary_dtype)
     g, h, w = x.shape
     gw = wl.shape[0]
     assert g % gw == 0, (g, gw)
@@ -193,13 +201,15 @@ def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
             return a.reshape(g * n, chunk, w)
 
         cfg = ScanConfig(impl=impl, channels_per_weight=1,
-                         row_tile=row_tile, interpret=interpret)
+                         row_tile=row_tile, interpret=interpret,
+                         carry_dtype=str(jnp.dtype(carry_dtype)))
         out = _gspn_core(cfg, fold(x), fold(wl_b), fold(wc_b), fold(wr_b),
                          fold(lam))
         return out.reshape(g, h, w)
 
     cfg = ScanConfig(impl=impl, channels_per_weight=cpw,
-                     row_tile=row_tile, interpret=interpret)
+                     row_tile=row_tile, interpret=interpret,
+                     carry_dtype=str(jnp.dtype(carry_dtype)))
     return _gspn_core(cfg, x, wl, wc, wr, lam)
 
 
@@ -218,7 +228,8 @@ def _pair_fwd_dispatch(cfg: ScanConfig, x, wl2, wc2, wr2, lam2):
         return _mk.gspn_scan_bidir_pallas(
             x, {"wl": wl2, "wc": wc2, "wr": wr2}, lam2,
             channels_per_weight=cfg.channels_per_weight,
-            row_tile=cfg.row_tile, interpret=cfg.interpret)
+            row_tile=cfg.row_tile, interpret=cfg.interpret,
+            carry_dtype=jnp.dtype(cfg.carry_dtype))
     fwd = _ref.gspn_scan_ref(x, wl2[0], wc2[0], wr2[0], lam2[0])
     rev = _ref.gspn_scan_ref(x, wl2[1], wc2[1], wr2[1], lam2[1],
                              reverse=True)
@@ -287,7 +298,8 @@ _gspn_pair_core.defvjp(_gspn_pair_fwd, _gspn_pair_bwd)
 def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, chunk: int | None = None,
                    impl: str = "auto", row_tile: int | None = None,
                    interpret: bool = True, mesh=None, seq_axis: str = "seq",
-                   sp_strategy: str = "auto"):
+                   sp_strategy: str = "auto", carry_dtype="float32",
+                   sp_boundary_dtype=None):
     """Fused opposite-direction pair scan with optional GSPN-local chunking.
 
     x: (G, H, W) — SHARED by both directions; wl2/wc2/wr2: (2, G_w, H, W)
@@ -316,11 +328,13 @@ def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, chunk: int | None = None,
             return a.reshape(2, g * n, chunk, w)
 
         cfg = ScanConfig(impl=impl, channels_per_weight=1,
-                         row_tile=row_tile, interpret=interpret)
+                         row_tile=row_tile, interpret=interpret,
+                         carry_dtype=str(jnp.dtype(carry_dtype)))
         out = _gspn_pair_core(cfg, fold(x), fold2(wl_b), fold2(wc_b),
                               fold2(wr_b), fold2(lam2))
         return out.reshape(2, g, h, w)
 
     cfg = ScanConfig(impl=impl, channels_per_weight=cpw,
-                     row_tile=row_tile, interpret=interpret)
+                     row_tile=row_tile, interpret=interpret,
+                     carry_dtype=str(jnp.dtype(carry_dtype)))
     return _gspn_pair_core(cfg, x, wl2, wc2, wr2, lam2)

@@ -26,7 +26,6 @@ Two reference implementations live here:
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -31,25 +31,36 @@ class TileChoice:
 
 
 def scan_working_set(row_tile: int, w: int, dtype_bytes: int,
-                     n_streams: int = 6, double_buffer: bool = True) -> int:
+                     n_streams: int = 6, double_buffer: bool = True,
+                     carry_dtype_bytes: int = 4) -> int:
     """Bytes resident per grid cell: n_streams streamed tiles (+ their
-    prefetch copies) + the f32 carry row."""
+    prefetch copies) + the carry row.
+
+    ``dtype_bytes`` is the STREAMED dtype (bf16 halves every tile);
+    ``carry_dtype_bytes`` is the VMEM carry row's dtype, kept separate so
+    the accounting stays honest under the mixed-precision policy
+    (DESIGN.md §10: bf16 streams, f32 carry).
+    """
     tile = row_tile * w * dtype_bytes
     mult = 2 if double_buffer else 1
-    return n_streams * tile * mult + w * 4
+    return n_streams * tile * mult + w * carry_dtype_bytes
 
 
 def pick_row_tile(h: int, w: int, dtype_bytes: int = 4,
                   vmem_budget: int = VMEM_BYTES, cap: int = 512,
-                  n_streams: int = 6) -> TileChoice:
+                  n_streams: int = 6,
+                  carry_dtype_bytes: int = 4) -> TileChoice:
     """Largest power-of-two divisor of ``h`` whose working set fits."""
     best = 1
     t = 1
     while t * 2 <= cap and h % (t * 2) == 0:
         t *= 2
-        if scan_working_set(t, w, dtype_bytes, n_streams) <= vmem_budget:
+        if scan_working_set(t, w, dtype_bytes, n_streams,
+                            carry_dtype_bytes=carry_dtype_bytes) \
+                <= vmem_budget:
             best = t
     return TileChoice(row_tile=best,
                       working_set_bytes=scan_working_set(
-                          best, w, dtype_bytes, n_streams),
+                          best, w, dtype_bytes, n_streams,
+                          carry_dtype_bytes=carry_dtype_bytes),
                       n_grid_steps=h // best)

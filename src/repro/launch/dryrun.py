@@ -21,7 +21,6 @@ already exists (incremental).
 """
 
 import argparse
-import dataclasses
 import json
 import subprocess
 import sys

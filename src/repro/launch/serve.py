@@ -4,9 +4,12 @@ stream through the continuous-batching engine (DESIGN.md §9).
 Engine knobs surfaced here: ``--max-batch`` (decode slots),
 ``--prefill-chunk`` (0 = one-shot prefill; otherwise prompts are consumed
 in chunks interleaved with decode), ``--scheduler fcfs|sjf``, ``--impl``
-(GSPN kernel selection threaded into the model config), and
+(GSPN kernel selection threaded into the model config),
 ``--seq-parallel`` (serve through a `seq`-axis mesh so the GSPN scans
-shard across devices, DESIGN.md §8).
+shard across devices, DESIGN.md §8), ``--state-dtype bf16`` (narrow the
+pooled propagation state at rest — half the pool bytes, ~2× decode batch
+at fixed memory) and ``--precision bf16`` (run the model itself under the
+mixed-precision policy, DESIGN.md §10).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
         --reduced --requests 8 --prefill-chunk 128 --scheduler sjf
@@ -22,7 +25,8 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.configs.base import get_arch
+from repro.configs.base import (PRECISIONS, get_arch, resolve_dtype,
+                                with_precision)
 from repro.models.lm import Ctx, init_lm
 from repro.serve.engine import Request, ServeEngine
 
@@ -46,11 +50,21 @@ def main():
     ap.add_argument("--seq-parallel", type=int, default=1,
                     help="carve a seq mesh axis of this size and serve "
                          "the sharded model (impl=sp, DESIGN.md §8)")
+    ap.add_argument("--state-dtype", default="",
+                    choices=["", "f32", "bf16"],
+                    help="at-rest dtype of the pooled propagation state "
+                         "(bf16 halves pool bytes, DESIGN.md §10)")
+    ap.add_argument("--precision", default="",
+                    choices=[""] + sorted(PRECISIONS),
+                    help="mixed-precision policy for the served model "
+                         "(params/compute/carries, DESIGN.md §10)")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
     entry = get_arch(args.arch)
     cfg = entry.reduced() if args.reduced else entry.full()
+    if args.precision:
+        cfg = with_precision(cfg, args.precision)
     if args.impl:
         cfg = dataclasses.replace(cfg, gspn_impl=args.impl)
 
@@ -76,7 +90,12 @@ def main():
     eng = ServeEngine(params, cfg, batch_size=args.max_batch,
                       max_len=args.max_len, temperature=args.temperature,
                       prefill_chunk=args.prefill_chunk,
-                      scheduler=args.scheduler, ctx=ctx)
+                      scheduler=args.scheduler, ctx=ctx,
+                      state_dtype=(resolve_dtype(args.state_dtype)
+                                   if args.state_dtype else None))
+    if args.state_dtype:
+        print(f"[serve] state pool dtype {args.state_dtype}: "
+              f"{eng.pool.nbytes/2**20:.1f} MiB pooled state")
     rng = np.random.default_rng(0)
     # Discrete prompt lengths (each distinct length is a separate jit
     # trace of the prefill); when chunking is on, the long length must

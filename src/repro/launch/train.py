@@ -17,11 +17,12 @@ import logging
 
 import jax
 
-from repro.configs.base import get_arch
+from repro.configs.base import PRECISIONS, get_arch, with_precision
 from repro.data.pipeline import DataConfig
 from repro.launch.mesh import (dp_axes_for, make_mesh_for_devices,
                                make_production_mesh)
 from repro.optim.adamw import AdamWConfig
+from repro.train.step import LossScaleConfig
 from repro.train.trainer import ElasticTrainer, TrainerConfig
 
 
@@ -42,6 +43,11 @@ def main():
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "int8_ef"])
     ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--precision", default="",
+                    choices=[""] + sorted(PRECISIONS),
+                    help="mixed-precision policy (DESIGN.md §10); 'bf16' "
+                         "trains bf16 params over an f32 master copy "
+                         "with dynamic loss scaling")
     ap.add_argument("--distributed", action="store_true",
                     help="initialise jax.distributed from env (multi-host)")
     args = ap.parse_args()
@@ -62,6 +68,13 @@ def main():
 
     cfg = entry.reduced() if args.reduced else entry.full(n_model_shards=tp)
     cfg = dataclasses.replace(cfg, n_model_shards=tp, max_seq=args.seq)
+    mp_kwargs = {}
+    if args.precision:
+        cfg = with_precision(cfg, args.precision)
+        if cfg.param_dtype != jax.numpy.float32:
+            # low-precision params need the f32 master + loss-scale loop
+            mp_kwargs = dict(master_weights=True,
+                             loss_scaling=LossScaleConfig())
 
     n_hosts = jax.process_count()
     trainer = ElasticTrainer(
@@ -78,7 +91,8 @@ def main():
         mesh=mesh, dp_axes=dp_axes,
         grad_compression=args.grad_compression,
         mesh_builder=lambda devs: make_mesh_for_devices(
-            devs, model_parallel=tp))
+            devs, model_parallel=tp),
+        **mp_kwargs)
     trainer.init_or_restore()
     hist = trainer.run(args.steps)
     print(f"[train] {args.arch}: loss {hist[0]:.4f} -> {hist[-1]:.4f}, "

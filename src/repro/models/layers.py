@@ -26,6 +26,10 @@ import jax.numpy as jnp
 class DTypePolicy:
     param_dtype: jnp.dtype = jnp.float32
     compute_dtype: jnp.dtype = jnp.bfloat16
+    # Recurrent/accumulator dtype (DESIGN.md §10): scan carries, boundary
+    # compositions and loss reductions stay here even when params and
+    # streamed compute narrow to bf16.
+    carry_dtype: jnp.dtype = jnp.float32
 
     def cast(self, p):
         return jax.tree.map(lambda a: a.astype(self.compute_dtype), p)

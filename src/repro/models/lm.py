@@ -31,7 +31,6 @@ functions in ``KINDS``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -42,7 +41,7 @@ from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
-from repro.models.layers import (DTypePolicy, DEFAULT_POLICY, dense_init,
+from repro.models.layers import (DTypePolicy, dense_init,
                                  embed_init, init_rmsnorm, apply_rmsnorm,
                                  init_layernorm, apply_layernorm,
                                  init_swiglu, apply_swiglu,
@@ -89,6 +88,11 @@ class LMConfig:
     gspn_impl: str = "xla"         # "sp" shards the folded-grid scans over
     gspn_seq_axis: str = "seq"     # the mesh's seq axis (DESIGN.md §8)
     gspn_sp_strategy: str = "auto"
+    # Streamed compute dtype of the GSPN mixer's scans (DESIGN.md §10).
+    # Defaults to f32 independently of ``compute_dtype`` so the mixer's
+    # chunked≡one-shot equivalence stays exact unless a mixed-precision
+    # policy (configs.base.with_precision) opts the scans into bf16.
+    gspn_compute_dtype: Any = jnp.float32
     # encoder-decoder (audio)
     encoder_layers: int = 0
     enc_len: int = 1500
@@ -98,6 +102,9 @@ class LMConfig:
     attn_block_k: int = 512
     param_dtype: Any = jnp.float32
     compute_dtype: Any = jnp.bfloat16
+    # Scan-carry / accumulator dtype (DESIGN.md §10): stays f32 under the
+    # default mixed-precision policy even when params/compute are bf16.
+    carry_dtype: Any = jnp.float32
 
     @property
     def hd(self) -> int:
@@ -105,7 +112,8 @@ class LMConfig:
 
     @property
     def policy(self) -> DTypePolicy:
-        return DTypePolicy(self.param_dtype, self.compute_dtype)
+        return DTypePolicy(self.param_dtype, self.compute_dtype,
+                           self.carry_dtype)
 
     def stages(self):
         """Flattened (where, kind, n) list: prelude then unit."""
@@ -183,7 +191,10 @@ def _gspn_cfg(cfg: LMConfig):
     return gspn_core.GSPNSeqConfig(
         dim=cfg.d_model, proxy_dim=cfg.gspn_proxy_dim,
         row_width=cfg.gspn_row_width, impl=cfg.gspn_impl,
-        seq_axis=cfg.gspn_seq_axis, sp_strategy=cfg.gspn_sp_strategy)
+        seq_axis=cfg.gspn_seq_axis, sp_strategy=cfg.gspn_sp_strategy,
+        param_dtype=cfg.param_dtype,
+        compute_dtype=cfg.gspn_compute_dtype,
+        carry_dtype=cfg.carry_dtype)
 
 
 def _norm_init(cfg: LMConfig):

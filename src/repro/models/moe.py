@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -121,12 +120,10 @@ def _route(x2d, router_w, cfg: MoEConfig):
     if cfg.renorm_gates:
         top_v = top_v / jnp.maximum(top_v.sum(-1, keepdims=True), 1e-9)
     # Switch-style aux loss: E * sum(frac_tokens * frac_probs)
-    t = x2d.shape[0]
     onehot_top1 = jax.nn.one_hot(top_i[:, 0], cfg.n_experts, dtype=jnp.float32)
     frac_tokens = onehot_top1.mean(axis=0)
     frac_probs = probs.mean(axis=0)
     aux = cfg.n_experts * jnp.sum(frac_tokens * frac_probs)
-    del t
     return top_v, top_i, aux
 
 
@@ -138,10 +135,9 @@ def _moe_shard_body(x, router_w, gate_slab, up_slab, down_slab,
     and the aux loss (identical on every shard)."""
     t, d = x.shape
     k = cfg.top_k
-    e_loc, c_dim = cfg.e_loc, None
+    e_loc = cfg.e_loc
     cap = int(math.ceil(k * t / cfg.n_experts * cfg.capacity_factor))
     cap = max(cap, 1)
-    c_dim = cap
 
     gates, experts, aux = _route(x, router_w, cfg)      # (T,k)
 

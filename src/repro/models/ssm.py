@@ -17,7 +17,6 @@ Decode-mode helpers advance the recurrent state one token at a time.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp

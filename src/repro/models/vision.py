@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gspn as gspn_core
-from repro.models.layers import (DTypePolicy, DEFAULT_POLICY, dense_init,
+from repro.models.layers import (DTypePolicy, dense_init,
                                  init_layernorm, apply_layernorm,
                                  init_gelu_mlp, apply_gelu_mlp,
                                  init_dwconv2d, apply_dwconv2d)

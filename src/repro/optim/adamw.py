@@ -9,7 +9,6 @@ params) -> (new_params, new_state, stats)``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

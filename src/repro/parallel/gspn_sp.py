@@ -91,6 +91,11 @@ class SPConfig:
     channels_per_weight: int = 1
     row_tile: int | None = None
     interpret: bool = True
+    # Wire dtype of the boundary exchange (DESIGN.md §10): the (T, b)
+    # payloads are cast to this before every collective hop; the
+    # associative composition itself always runs in f32.  bf16 halves the
+    # exchanged bytes — the one cross-device traffic of the scan.
+    boundary_dtype: str = "float32"
 
     def resolved_strategy(self) -> str:
         if self.strategy != "auto":
@@ -205,6 +210,7 @@ def _exchange(t, b_last, cfg: SPConfig, *, reverse: bool):
     zero = jnp.zeros_like(b_last, dtype=jnp.float32)
     if k == 1:
         return zero
+    wire = jnp.dtype(cfg.boundary_dtype)
     b_last = b_last.astype(jnp.float32)
     idx = jax.lax.axis_index(ax)
     # Position in scan order: the reverse pass consumes blocks last→first.
@@ -215,13 +221,14 @@ def _exchange(t, b_last, cfg: SPConfig, *, reverse: bool):
         # At hop s the block at scan position s-1 (whose incoming boundary
         # was finalised at hop s-1) sends its corrected outgoing boundary
         # T·b_in + b_last to position s; everyone else's payload is
-        # ignored by the masked update.
+        # ignored by the masked update.  The payload crosses the wire in
+        # cfg.boundary_dtype; the fold stays f32 (DESIGN.md §10).
         perm = ([(i, i - 1) for i in range(1, k)] if reverse
                 else [(i, i + 1) for i in range(k - 1)])
         b_in = zero
         for s in range(1, k):
-            send = _apply_transfer(t, b_in, cpw) + b_last
-            recv = jax.lax.ppermute(send, ax, perm)
+            send = (_apply_transfer(t, b_in, cpw) + b_last).astype(wire)
+            recv = jax.lax.ppermute(send, ax, perm).astype(jnp.float32)
             b_in = jnp.where(pos == s, recv, b_in)
         return b_in
 
@@ -229,15 +236,18 @@ def _exchange(t, b_last, cfg: SPConfig, *, reverse: bool):
     # each device then folds its own prefix with K cheap matvecs (the
     # composition (T_b, b_b)∘(T_a, b_a) = (T_b T_a, T_b b_a + b_b) applied
     # left-to-right in scan order — no (W, W) matmuls needed since only
-    # the boundary column, not the composed operator, is consumed).
-    tg = jax.lax.all_gather(t, ax)            # (K, G_w, W, W) device order
-    bg = jax.lax.all_gather(b_last, ax)       # (K, G, W)
+    # the boundary column, not the composed operator, is consumed).  The
+    # gathered (T, b) payloads cross the wire in cfg.boundary_dtype; the
+    # prefix fold composes in f32.
+    tg = jax.lax.all_gather(t.astype(wire), ax)   # (K, G_w, W, W) dev order
+    bg = jax.lax.all_gather(b_last.astype(wire), ax)    # (K, G, W)
     if reverse:
         tg, bg = jnp.flip(tg, 0), jnp.flip(bg, 0)   # reorder to scan order
 
     def fold(acc, pair):
         tj, bj = pair
-        nxt = _apply_transfer(tj, acc, cpw) + bj
+        nxt = _apply_transfer(tj.astype(jnp.float32), acc, cpw) \
+            + bj.astype(jnp.float32)
         return nxt, nxt
 
     _, prefixes = jax.lax.scan(fold, zero, (tg, bg))
@@ -338,12 +348,15 @@ _sp_core.defvjp(_sp_core_fwd, _sp_core_bwd)
 def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
                  strategy: str = "auto", inner_impl: str = "auto",
                  row_tile: int | None = None, interpret: bool = True,
-                 chunk: int | None = None, batch_axes=None):
+                 chunk: int | None = None, batch_axes=None,
+                 boundary_dtype=None):
     """Spatially-sharded GSPN line scan (``impl="sp"``).
 
     Same semantics and layout as :func:`repro.kernels.ops.gspn_scan` —
     x, lam: (G, H, W); wl/wc/wr: (G_w, H, W) — but the scan dimension H is
     partitioned into contiguous blocks over the ``axis_name`` mesh axis.
+    ``boundary_dtype`` (default f32) is the wire dtype of the boundary
+    exchange payloads; composition always runs in f32 (DESIGN.md §10).
     Differentiable in all tensor args (custom_vjp; the backward pass
     reverses the exchange direction).  H need not divide the axis size.
 
@@ -388,7 +401,10 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
     cfg = SPConfig(axis_name=axis_name, n_blocks=n_seq, strategy=strategy,
                    inner_impl=_resolve_inner(inner_impl),
                    channels_per_weight=g // gw, row_tile=row_tile,
-                   interpret=interpret)
+                   interpret=interpret,
+                   boundary_dtype=str(jnp.dtype(
+                       boundary_dtype if boundary_dtype is not None
+                       else jnp.float32)))
     if batch_axes is None:
         batch_axes = ("pod", "data")
     batch_axes = tuple(a for a in batch_axes

@@ -14,7 +14,6 @@ fake 4-device mesh and is wired as ``--pipeline`` in the launcher.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -20,10 +20,8 @@ a single rule set serves every architecture/mesh combination.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # (pattern, trailing-dims spec).  First match wins.  "fsdp" is substituted

@@ -7,7 +7,6 @@
 from __future__ import annotations
 
 import argparse
-import re
 
 from repro.roofline.analysis import analyze_dir, markdown_table
 

@@ -31,6 +31,18 @@ import jax.numpy as jnp
 from repro.models import lm as lm_mod
 
 
+def narrow_state(tree, state_dtype):
+    """Cast every floating leaf of a cache pytree to ``state_dtype``
+    (DESIGN.md §10); integer leaves (lengths, positions) pass through.
+    The single definition of the at-rest narrowing rule — the pool's
+    init/update and the engine's jitted decode all route through it."""
+    if state_dtype is None:
+        return tree
+    return jax.tree.map(
+        lambda a: a.astype(state_dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
 def update_cache_slots(cfg, caches, new_caches, slots):
     """Scatter ``new_caches`` (batch = len(slots)) into ``caches`` at the
     given slot indices.  Batch-axis position depends on the stage kind:
@@ -64,15 +76,33 @@ class StateCachePool:
     list is LIFO so tests can pin reuse; ``alloc`` returns ``None`` on
     exhaustion (the scheduler's backpressure signal — requests then wait
     in the admission queue).
+
+    ``state_dtype`` (DESIGN.md §10) narrows every floating cache leaf —
+    attention KV pages and GSPN/SSM propagation state alike — to the
+    given dtype at rest (integer leaves such as lengths/positions are
+    untouched).  bf16 halves the pool's bytes, which doubles the decode
+    batch that fits a fixed memory budget; ``commit``/``update`` casts on
+    scatter, and every consumer already lifts state back to f32 compute
+    at use, so narrowing is a storage decision, not a compute one.
     """
 
-    def __init__(self, cfg, n_slots: int, max_len: int):
+    def __init__(self, cfg, n_slots: int, max_len: int, state_dtype=None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
-        self.caches = lm_mod.init_lm_cache(cfg, n_slots, max_len)
+        self.state_dtype = (None if state_dtype is None
+                            else jnp.dtype(state_dtype))
+        self.caches = narrow_state(
+            lm_mod.init_lm_cache(cfg, n_slots, max_len), self.state_dtype)
         self._free = list(range(n_slots - 1, -1, -1))   # pop() yields slot 0
         self._used = set()
+
+    @property
+    def nbytes(self) -> int:
+        """Total bytes of the pooled cache pytree (the serve-memory
+        number the dtype ladder reports)."""
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.caches))
 
     # -- allocation ---------------------------------------------------------
     def alloc(self):
@@ -106,5 +136,9 @@ class StateCachePool:
                                          new_caches, [slot])
 
     def update(self, caches):
-        """Install the post-decode batched caches (all slots at once)."""
-        self.caches = caches
+        """Install the post-decode batched caches (all slots at once),
+        re-narrowing floating leaves to ``state_dtype`` — decode steps
+        hand back f32/compute-dtype state (they compute in f32 and the
+        attention path preserves its cache dtype), and the pool must not
+        silently widen after the first tick."""
+        self.caches = narrow_state(caches, self.state_dtype)

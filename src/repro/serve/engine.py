@@ -44,7 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm as lm_mod
-from repro.serve.cache import StateCachePool, update_cache_slots  # noqa: F401
+from repro.serve.cache import (StateCachePool, narrow_state,
+                               update_cache_slots)  # noqa: F401
 # update_cache_slots is re-exported: it moved to serve.cache (the pool owns
 # the scatter) but long-standing callers import it from here.
 
@@ -107,7 +108,7 @@ class ServeEngine:
                  max_len: int = 512, temperature: float = 0.0,
                  top_k: int = 0, eos_id: Optional[int] = None,
                  seed: int = 0, ctx=None, prefill_chunk: int = 0,
-                 scheduler: str = "fcfs",
+                 scheduler: str = "fcfs", state_dtype=None,
                  stream: Optional[Callable[[int, int], None]] = None,
                  on_finish: Optional[Callable[[Result], None]] = None):
         if scheduler not in ("fcfs", "sjf"):
@@ -121,6 +122,10 @@ class ServeEngine:
         self.eos_id = eos_id
         self.ctx = ctx or lm_mod.Ctx()
         self.scheduler = scheduler
+        # At-rest dtype of the pooled propagation state (DESIGN.md §10):
+        # bf16 halves pool bytes → ~2× decode batch at fixed memory.
+        self.state_dtype = (None if state_dtype is None
+                            else jnp.dtype(state_dtype))
         self.stream = stream
         self.on_finish = on_finish
         self.rng = jax.random.PRNGKey(seed)
@@ -135,7 +140,8 @@ class ServeEngine:
         else:
             self.prefill_chunk = 0
 
-        self.pool = StateCachePool(cfg, batch_size, max_len)
+        self.pool = StateCachePool(cfg, batch_size, max_len,
+                                   state_dtype=self.state_dtype)
         self._reset_state()
 
         self._prefill = jax.jit(
@@ -168,7 +174,8 @@ class ServeEngine:
         """Clear all scheduling state (fresh pool pages included) but keep
         the compiled functions (benchmark rungs reuse one engine to avoid
         re-jitting)."""
-        self.pool = StateCachePool(self.cfg, self.bs, self.max_len)
+        self.pool = StateCachePool(self.cfg, self.bs, self.max_len,
+                                   state_dtype=self.state_dtype)
         self.rng = jax.random.PRNGKey(self._seed)
         self._reset_state()
 
@@ -176,6 +183,9 @@ class ServeEngine:
     def _decode_fn(self, params, token, caches, rng):
         logits, new_caches = lm_mod.lm_decode_step(params, self.cfg, token,
                                                    caches, ctx=self.ctx)
+        # narrow inside the jitted step so the cast fuses with the cache
+        # writes instead of costing a separate device pass
+        new_caches = narrow_state(new_caches, self.state_dtype)
         nxt = sample_tokens(logits[:, 0], rng, self.temperature, self.top_k)
         return nxt, new_caches
 

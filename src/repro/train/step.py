@@ -5,12 +5,23 @@ with sharding-aware jit compilation.
 trainer and the dry-run: it derives parameter/optimizer/batch shardings
 from the rules in :mod:`repro.parallel.sharding`, builds the jitted step
 with donated state, and returns everything needed to run or AOT-compile.
+
+Mixed-precision training (DESIGN.md §10): with ``master_weights=True``
+the working parameters stay in the model's ``param_dtype`` (bf16 under
+the policy) while an f32 master copy lives in ``state["master"]`` — the
+optimizer updates the master and the bf16 working copy is re-cast from
+it each step, so repeated tiny updates never round to zero in bf16.
+``loss_scaling`` adds the standard dynamic-loss-scale loop: the loss is
+multiplied by a running scale before differentiation, gradients are
+unscaled in f32, and a non-finite gradient anywhere skips the update and
+backs the scale off; ``growth_interval`` consecutive good steps grow it
+back.  bf16 shares f32's exponent range, so overflow is rarer than under
+fp16 — the backoff loop is cheap insurance, not the common path.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -23,24 +34,77 @@ from repro.parallel import sharding as shd
 from repro.parallel.collectives import quantize_int8, dequantize_int8
 
 
+# ---------------------------------------------------------------------------
+# Dynamic loss scaling (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LossScaleConfig:
+    init_scale: float = 2.0 ** 15
+    growth_interval: int = 200     # consecutive finite steps before growth
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    min_scale: float = 1.0
+    max_scale: float = 2.0 ** 24
+
+
+def loss_scale_init(cfg: LossScaleConfig):
+    return {"scale": jnp.asarray(cfg.init_scale, jnp.float32),
+            "good_steps": jnp.zeros((), jnp.int32)}
+
+
+def loss_scale_update(cfg: LossScaleConfig, state, grads_finite):
+    """Pure scale-state transition: backoff on overflow, growth after
+    ``growth_interval`` consecutive finite steps."""
+    grown = jnp.minimum(state["scale"] * cfg.growth_factor, cfg.max_scale)
+    backed = jnp.maximum(state["scale"] * cfg.backoff_factor, cfg.min_scale)
+    hit = state["good_steps"] + 1 >= cfg.growth_interval
+    new_scale = jnp.where(grads_finite,
+                          jnp.where(hit, grown, state["scale"]), backed)
+    new_good = jnp.where(grads_finite & jnp.logical_not(hit),
+                         state["good_steps"] + 1, 0)
+    return {"scale": new_scale, "good_steps": new_good}
+
+
+def tree_all_finite(tree):
+    leaves = [jnp.all(jnp.isfinite(a.astype(jnp.float32)))
+              for a in jax.tree.leaves(tree)]
+    if not leaves:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack(leaves))
+
+
 def build_train_step(model_cfg, opt_cfg: AdamWConfig, *, mesh=None,
                      dp_axes=("data",), grad_compression: str = "none",
-                     grad_accum: int = 1):
+                     grad_accum: int = 1, master_weights: bool = False,
+                     loss_scaling: Optional[LossScaleConfig] = None):
     """Returns train_step(state, batch) -> (state, metrics).  Pure.
 
     ``grad_accum`` > 1 splits the per-host batch into K microbatches and
     accumulates f32 gradients over a scan — the standard lever for fitting
     large activation footprints into HBM (per-layer residual stacks shrink
     by K while arithmetic intensity stays unchanged).
+
+    ``master_weights`` keeps an f32 master copy in ``state["master"]``
+    and treats ``state["params"]`` as the low-precision working copy;
+    ``loss_scaling`` enables the dynamic loss-scale loop (both DESIGN.md
+    §10; state carries ``loss_scale`` = {scale, good_steps}).
     """
     ctx = lm_mod.Ctx(mesh=mesh, dp_axes=dp_axes)
 
-    def loss_fn(params, batch):
-        return lm_mod.lm_loss(params, model_cfg, batch, ctx)
+    def loss_fn(params, batch, scale=None):
+        (loss, metrics) = lm_mod.lm_loss(params, model_cfg, batch, ctx)
+        if scale is None:
+            return loss, metrics
+        # Differentiate the SCALED loss; report the unscaled one.  The
+        # scale rides through the chain rule, so grads come out
+        # scale-times too large and are unscaled in f32 below.
+        return loss * scale, {**metrics, "unscaled_loss": loss}
 
-    def grads_of(params, batch):
+    def grads_of(params, batch, scale=None):
         if grad_accum <= 1:
-            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, scale)
         k = grad_accum
 
         def fold(a):
@@ -58,22 +122,52 @@ def build_train_step(model_cfg, opt_cfg: AdamWConfig, *, mesh=None,
         def body(acc, mb):
             g_acc, loss_acc, aux_acc = acc
             (loss, metrics), g = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, mb)
+                loss_fn, has_aux=True)(params, mb, scale)
             g_acc = jax.tree.map(
                 lambda a, b: a + b.astype(a.dtype), g_acc, g)
-            return (g_acc, loss_acc + loss, aux_acc + metrics["aux"]), None
+            # accumulate the UNSCALED loss (metrics carry it either way)
+            raw = metrics["ce"] + metrics["aux"]
+            return (g_acc, loss_acc + raw, aux_acc + metrics["aux"]), None
 
         zeros = jax.tree.map(
             lambda p: jnp.zeros(p.shape, acc_dtype(p)), params)
         (g_acc, loss_sum, aux_sum), _ = jax.lax.scan(
             body, (zeros, jnp.zeros(()), jnp.zeros(())), micro)
-        grads = jax.tree.map(lambda g, p: (g / k).astype(p.dtype),
-                             g_acc, params)
+        # The master path must not round the accumulated grads back to
+        # the bf16 param dtype — the f32 master exists to receive the
+        # bits that cast would destroy.  (Accumulation itself may still
+        # run in bf16 per acc_dtype's memory note; the mean is taken at
+        # full width either way.)
+        out_dtype = ((lambda p: jnp.float32) if master_weights
+                     else (lambda p: p.dtype))
+        grads = jax.tree.map(
+            lambda g, p: (g.astype(jnp.float32) / k).astype(out_dtype(p)),
+            g_acc, params)
         loss = loss_sum / k
-        return (loss, {"ce": loss - aux_sum / k, "aux": aux_sum / k}), grads
+        out = {"ce": loss - aux_sum / k, "aux": aux_sum / k}
+        if scale is not None:
+            out["unscaled_loss"] = loss
+            loss = loss * scale
+        return (loss, out), grads
 
     def train_step(state, batch):
-        (loss, metrics), grads = grads_of(state["params"], batch)
+        scale = state["loss_scale"]["scale"] if loss_scaling else None
+        (loss, metrics), grads = grads_of(state["params"], batch, scale)
+
+        grads_finite = None
+        if loss_scaling is not None:
+            loss = metrics.pop("unscaled_loss")
+            # Overflow check on the RAW (still-scaled) grads, then unscale
+            # in f32.  The master path keeps f32 grads all the way into
+            # the optimizer — re-rounding to bf16 here would throw away
+            # the very bits the master copy exists to keep.
+            grads_finite = tree_all_finite(grads)
+            inv = 1.0 / scale
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * inv).astype(
+                    jnp.float32 if master_weights else g.dtype), grads)
+        elif master_weights:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
         if grad_compression == "int8_ef":
             # Error-feedback int8 quantisation of the (already reduced)
@@ -94,11 +188,43 @@ def build_train_step(model_cfg, opt_cfg: AdamWConfig, *, mesh=None,
         else:
             new_errors = state.get("errors")
 
-        new_params, new_opt, stats = adamw_update(
-            opt_cfg, grads, state["opt"], state["params"])
+        # The optimizer walks the f32 master when one exists; the working
+        # (low-precision) params are re-cast from it afterwards.
+        opt_params = state["master"] if master_weights else state["params"]
+        new_opt_params, new_opt, stats = adamw_update(
+            opt_cfg, grads, state["opt"], opt_params)
+        if master_weights:
+            new_master = new_opt_params
+            new_params = jax.tree.map(lambda m, p: m.astype(p.dtype),
+                                      new_master, state["params"])
+        else:
+            new_master = None
+            new_params = new_opt_params
+
+        if loss_scaling is not None:
+            # Non-finite grads anywhere: keep params/master/opt untouched
+            # (the step is skipped, not poisoned) and back the scale off.
+            def keep(new, old):
+                return jax.tree.map(
+                    lambda a, b: jnp.where(grads_finite, a, b), new, old)
+
+            new_params = keep(new_params, state["params"])
+            new_opt = keep(new_opt, state["opt"])
+            if master_weights:
+                new_master = keep(new_master, state["master"])
+            new_ls = loss_scale_update(loss_scaling, state["loss_scale"],
+                                       grads_finite)
+
         new_state = {"params": new_params, "opt": new_opt}
         if new_errors is not None:
             new_state["errors"] = new_errors
+        if master_weights:
+            new_state["master"] = new_master
+        if loss_scaling is not None:
+            new_state["loss_scale"] = new_ls
+            stats = {**stats,
+                     "loss_scale": state["loss_scale"]["scale"],
+                     "grads_finite": grads_finite.astype(jnp.float32)}
         out_metrics = {"loss": loss, **metrics, **stats}
         return new_state, out_metrics
 
@@ -117,7 +243,9 @@ class TrainSetup:
 
 def make_train_setup(model_cfg, opt_cfg: AdamWConfig, batch_example, *,
                      mesh, dp_axes=("data",), grad_compression="none",
-                     donate=True) -> TrainSetup:
+                     donate=True, master_weights: bool = False,
+                     loss_scaling: Optional[LossScaleConfig] = None
+                     ) -> TrainSetup:
     """Derive shardings, build the jitted step, and an init function."""
     def init_fn(key):
         params = lm_mod.init_lm(key, model_cfg)
@@ -125,6 +253,11 @@ def make_train_setup(model_cfg, opt_cfg: AdamWConfig, batch_example, *,
         if grad_compression == "int8_ef":
             state["errors"] = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if master_weights:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        if loss_scaling is not None:
+            state["loss_scale"] = loss_scale_init(loss_scaling)
         return state
 
     abstract = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
@@ -134,10 +267,17 @@ def make_train_setup(model_cfg, opt_cfg: AdamWConfig, batch_example, *,
                                "step": NamedSharding(mesh, P())}}
     if "errors" in abstract:
         state_shardings["errors"] = pshard
+    if "master" in abstract:
+        state_shardings["master"] = pshard
+    if "loss_scale" in abstract:
+        state_shardings["loss_scale"] = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), abstract["loss_scale"])
     bshard = shd.batch_shardings(batch_example, mesh, dp_axes)
 
     step = build_train_step(model_cfg, opt_cfg, mesh=mesh, dp_axes=dp_axes,
-                            grad_compression=grad_compression)
+                            grad_compression=grad_compression,
+                            master_weights=master_weights,
+                            loss_scaling=loss_scaling)
     jit_step = jax.jit(
         step,
         in_shardings=(state_shardings, bshard),

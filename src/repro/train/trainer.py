@@ -22,11 +22,10 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import compat
 from repro.checkpoint.manager import CheckpointManager
@@ -51,7 +50,8 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, model_cfg, opt_cfg: AdamWConfig, data_cfg: DataConfig,
                  tcfg: TrainerConfig, *, mesh, dp_axes=("data",),
-                 grad_compression="none",
+                 grad_compression="none", master_weights=False,
+                 loss_scaling=None,
                  failure_injector: Optional[Callable[[int], None]] = None):
         self.model_cfg = model_cfg
         self.opt_cfg = opt_cfg
@@ -60,13 +60,16 @@ class Trainer:
         self.mesh = mesh
         self.dp_axes = dp_axes
         self.grad_compression = grad_compression
+        self.master_weights = master_weights
+        self.loss_scaling = loss_scaling
         self.failure_injector = failure_injector
 
         example = {k: jnp.asarray(v)
                    for k, v in host_batch(data_cfg, 0).items()}
         self.setup: TrainSetup = make_train_setup(
             model_cfg, opt_cfg, example, mesh=mesh, dp_axes=dp_axes,
-            grad_compression=grad_compression)
+            grad_compression=grad_compression,
+            master_weights=master_weights, loss_scaling=loss_scaling)
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep,
                                       host_id=data_cfg.host_id,
                                       n_hosts=data_cfg.n_hosts)
@@ -186,7 +189,9 @@ class ElasticTrainer(Trainer):
                    for k, v in host_batch(self.data_cfg, self.step).items()}
         self.setup = make_train_setup(
             self.model_cfg, self.opt_cfg, example, mesh=new_mesh,
-            dp_axes=self.dp_axes, grad_compression=self.grad_compression)
+            dp_axes=self.dp_axes, grad_compression=self.grad_compression,
+            master_weights=self.master_weights,
+            loss_scaling=self.loss_scaling)
         self._restore()
         return True
 

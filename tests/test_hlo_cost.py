@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.roofline.hlo_cost import analyze
-from repro.roofline.hlo import collective_bytes, op_census
+from repro.roofline.hlo import collective_bytes
 
 
 def _scan_matmul(trips=7, m=64, k=128, n=128):
@@ -60,7 +60,6 @@ def test_bytes_scale_with_trips():
 
 
 def test_collective_parser_on_psum():
-    import numpy as np
 
     def f(x):
         return jax.lax.psum(x, "i")

@@ -1,6 +1,7 @@
 """Pallas kernel validation: interpret-mode vs the pure-jnp oracle across
 shapes, dtypes, chunk settings and channel-sharing modes, plus gradients
-against the dense Eq.-4 oracle."""
+against the dense Eq.-4 oracle, and the VMEM tile tuner's working-set
+math under mixed dtypes (DESIGN.md §10)."""
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +10,7 @@ import pytest
 
 from repro.core import gspn as G
 from repro.kernels import ref as R
+from repro.kernels import tuning
 from repro.kernels.ops import gspn_scan
 
 pytestmark = pytest.mark.kernels
@@ -109,6 +111,72 @@ def test_chunk_full_equals_unchunked():
     b = gspn_scan(x, wl, wc, wr, lam, impl="pallas")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# VMEM tile tuner under mixed dtypes (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+def test_working_set_math_mixed_dtypes():
+    """Exact accounting: n_streams double-buffered streamed tiles in the
+    STREAM dtype + one carry row in the CARRY dtype."""
+    t, w, n = 64, 128, 6
+    assert tuning.scan_working_set(t, w, 4, n) == n * t * w * 4 * 2 + w * 4
+    # bf16 streams halve only the streamed term; the f32 carry is fixed
+    assert tuning.scan_working_set(t, w, 2, n) == n * t * w * 2 * 2 + w * 4
+    # carry_dtype_bytes moves only the carry term
+    assert (tuning.scan_working_set(t, w, 2, n, carry_dtype_bytes=2)
+            == n * t * w * 2 * 2 + w * 2)
+    # headroom: disabling double-buffering halves the streamed term only
+    assert (tuning.scan_working_set(t, w, 4, n, double_buffer=False)
+            == n * t * w * 4 + w * 4)
+
+
+def test_pick_row_tile_bf16_unlocks_double_tile():
+    """At a fixed VMEM budget, halving the streamed dtype doubles the row
+    tile — the §10 payoff the backward pass was missing while it
+    hard-coded dtype_bytes=4."""
+    budget = 2 ** 21
+    t32 = tuning.pick_row_tile(4096, 128, 4, vmem_budget=budget)
+    t16 = tuning.pick_row_tile(4096, 128, 2, vmem_budget=budget)
+    assert t16.row_tile == 2 * t32.row_tile
+    assert t32.working_set_bytes <= budget
+    assert t16.working_set_bytes <= budget
+    # and the bf16 choice would NOT fit if streamed at 4 bytes
+    assert tuning.scan_working_set(t16.row_tile, 128, 4) > budget
+
+
+def test_pick_row_tile_carry_bytes_respected():
+    """An (artificially) enormous carry must shrink the tile: the carry
+    term is part of the budget, not a constant 4-byte afterthought."""
+    budget = 2 ** 16
+    small = tuning.pick_row_tile(1024, 128, 2, vmem_budget=budget)
+    big_carry = tuning.pick_row_tile(1024, 128, 2, vmem_budget=budget,
+                                     carry_dtype_bytes=400)
+    assert big_carry.row_tile <= small.row_tile
+    assert big_carry.working_set_bytes <= budget
+
+
+@pytest.mark.parametrize("h", [48, 96, 136, 4096])
+@pytest.mark.parametrize("dtype_bytes", [2, 4])
+def test_pick_row_tile_divides_scan_length(h, dtype_bytes):
+    c = tuning.pick_row_tile(h, 64, dtype_bytes, cap=256)
+    assert h % c.row_tile == 0
+    assert c.row_tile & (c.row_tile - 1) == 0       # power of two
+    assert c.n_grid_steps == h // c.row_tile
+    assert c.row_tile <= 256
+
+
+def test_bwd_row_tile_sees_streamed_dtype():
+    """gspn_scan_bwd_pallas routes the REAL dy dtype into the tuner (the
+    fix for the hard-coded dtype_bytes=4): at equal shapes the bf16
+    adjoint may never pick a smaller tile than the f32 one."""
+    from repro.kernels.gspn_scan import pick_row_tile as wrapper
+    t32 = wrapper(4096, w=128, dtype_bytes=4, n_streams=5,
+                  carry_dtype_bytes=12)
+    t16 = wrapper(4096, w=128, dtype_bytes=2, n_streams=5,
+                  carry_dtype_bytes=12)
+    assert t16 >= t32
 
 
 def test_ref_vjp_helper_matches_autodiff():

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs.all_archs import ASSIGNED, EXTRAS
 from repro.configs.base import get_arch
-from repro.models.lm import (apply_lm, init_lm, init_lm_cache,
+from repro.models.lm import (apply_lm, init_lm,
                              lm_decode_step, lm_loss, lm_prefill,
                              count_params, count_active_params)
 

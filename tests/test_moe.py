@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.moe import (MoEConfig, apply_moe, init_moe,
                               moe_active_param_count, moe_param_count,

@@ -46,7 +46,6 @@ def test_macs_match_paper_table2():
 def test_gspn1_mode_has_more_scan_params():
     """GSPN-1 per-channel mode keeps separate propagation weights — the
     compact GSPN-2 mode must be strictly smaller at equal dims."""
-    import dataclasses
     from repro.core.gspn import (GSPNAttentionConfig,
                                  gspn_attention_param_count)
     c2 = GSPNAttentionConfig(dim=256, proxy_dim=8, channel_shared=True)
