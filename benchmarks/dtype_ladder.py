@@ -26,8 +26,9 @@ import numpy as np
 
 import benchmarks.common as common
 from benchmarks.common import emit, make_gspn_inputs, scan_bytes, time_fn
+from repro.kernels import autotune
 from repro.kernels.ops import gspn_scan
-from repro.kernels.tuning import pick_row_tile
+from repro.kernels.tuning import pick_row_tile_for_policy
 from repro.models.lm import LMConfig
 from repro.serve.cache import StateCachePool
 
@@ -73,10 +74,24 @@ def run():
                 err = (np.linalg.norm(out - ref)
                        / max(np.linalg.norm(ref), 1e-30))
                 nbytes = jnp.dtype(dtype).itemsize
-                tile = pick_row_tile(h, w, dtype_bytes=nbytes).row_tile
+                # Byte widths follow the named precision policy (DESIGN.md
+                # §10) instead of a hand-passed constant, and the emitted
+                # tile is what the launch actually used: the tuner's
+                # cached choice with the policy heuristic as fallback
+                # (DESIGN.md §11).  The key legs are derived from the
+                # operands (not hand-written) so they track the launch's
+                # own resolution inside gspn_scan_fwd_pallas.
+                x_in, wl_in = inputs[0], inputs[1]
+                tile = autotune.row_tile_for(
+                    h, w, c=x_in.shape[0], direction="fwd", impl="pallas",
+                    dtype=dtype,
+                    channel_shared=x_in.shape[0] != wl_in.shape[0],
+                    interpret=True)
+                heur = pick_row_tile_for_policy(
+                    h, w, dname, cap=autotune.DEFAULT_CAP).row_tile
                 mb = scan_bytes(B, CP, h, w, dtype_bytes=nbytes) / 2 ** 20
                 emit(f"dtype/{dname}/{impl}/{h}x{w}/fwd", t_f * 1e6,
-                     f"rel_err={err:.2e};row_tile={tile};"
+                     f"rel_err={err:.2e};row_tile={tile};heur={heur};"
                      f"stream_mb={mb:.1f}")
             step = jax.jit(lambda *a: _step(*a, impl="xla"))
             t_s = time_fn(step, *inputs)

@@ -1,0 +1,143 @@
+"""Benchmark regression gate — compare a ``benchmarks.run --json`` report
+against a committed baseline (DESIGN.md §11).
+
+    PYTHONPATH=src python -m benchmarks.gate \
+        --baseline benchmarks/BENCH_baseline.json \
+        --current bench-smoke.json [--tolerance 1.8] [--min-us 100]
+
+Per rung present in BOTH reports (and above the ``--min-us`` noise floor
+on at least one side) the gate computes ``ratio = current / baseline`` and
+
+* FAILS (exit 1) when ``ratio > tolerance``   — a regression;
+* notes an improvement when ``ratio < 1 / tolerance``;
+* passes otherwise.
+
+Rungs missing from either side are WARNINGS, never failures: a new
+benchmark must be able to land before its baseline exists, and a renamed
+or retired rung must not wedge CI — re-baseline to start gating it.
+
+Re-baselining (after an intentional perf change or a runner swap)::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke --only multidir,dtype \
+        --json current.json
+    PYTHONPATH=src python -m benchmarks.gate \
+        --baseline benchmarks/BENCH_baseline.json --current current.json \
+        --update        # overwrites the baseline with the current report
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+# A 2x injected slowdown must fail under the default band (the gate's own
+# acceptance test), while single-iteration smoke timings keep headroom;
+# the --min-us floor keeps sub-noise rungs out of the comparison.
+DEFAULT_TOLERANCE = 1.8
+DEFAULT_MIN_US = 100.0
+
+
+@dataclasses.dataclass
+class GateResult:
+    regressions: list      # (name, base_us, cur_us, ratio)
+    improvements: list     # (name, base_us, cur_us, ratio)
+    warnings: list         # human-readable strings
+    checked: int           # rungs actually compared
+
+    @property
+    def ok(self) -> bool:
+        return not self.regressions
+
+
+def load_report(path) -> dict:
+    """Read and validate one --json report (schema + row shape)."""
+    payload = json.loads(pathlib.Path(path).read_text())
+    if not isinstance(payload, dict) or "rows" not in payload:
+        raise ValueError(f"{path}: not a benchmarks.run --json report")
+    schema = payload.get("schema", 1)
+    if schema != 1:
+        raise ValueError(f"{path}: unsupported report schema {schema!r}")
+    for row in payload["rows"]:
+        if "name" not in row or "us_per_call" not in row:
+            raise ValueError(f"{path}: malformed row {row!r}")
+    return payload
+
+
+def index_rows(payload: dict) -> dict:
+    """name -> us_per_call.  Duplicate names keep the LAST row (ladders
+    re-emit a rung when re-run; the final measurement wins)."""
+    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+
+
+def compare(baseline: dict, current: dict, *,
+            tolerance: float = DEFAULT_TOLERANCE,
+            min_us: float = DEFAULT_MIN_US) -> GateResult:
+    """Pure comparison — both args are loaded report payloads."""
+    base, cur = index_rows(baseline), index_rows(current)
+    warnings = []
+    for name in sorted(set(base) - set(cur)):
+        warnings.append(f"baseline rung missing from current run: {name}")
+    for name in sorted(set(cur) - set(base)):
+        warnings.append(f"no baseline entry for {name} "
+                        f"(new rung — re-baseline to start gating it)")
+
+    regressions, improvements, checked = [], [], 0
+    for name in sorted(set(base) & set(cur)):
+        b_us, c_us = base[name], cur[name]
+        if max(b_us, c_us) < min_us:
+            continue                        # below the noise floor
+        checked += 1
+        ratio = c_us / max(b_us, 1e-9)
+        if ratio > tolerance:
+            regressions.append((name, b_us, c_us, ratio))
+        elif ratio < 1.0 / tolerance:
+            improvements.append((name, b_us, c_us, ratio))
+    return GateResult(regressions, improvements, warnings, checked)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.gate")
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="max allowed current/baseline slowdown ratio")
+    ap.add_argument("--min-us", type=float, default=DEFAULT_MIN_US,
+                    help="skip rungs below this on BOTH sides (noise)")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the baseline with the current report "
+                         "instead of gating (re-baselining)")
+    args = ap.parse_args(argv)
+
+    current = load_report(args.current)
+    if args.update:
+        pathlib.Path(args.baseline).write_text(
+            json.dumps(current, indent=1) + "\n")
+        print(f"[gate] re-baselined {args.baseline} from {args.current} "
+              f"({len(current['rows'])} rows)")
+        return 0
+
+    baseline = load_report(args.baseline)
+    res = compare(baseline, current, tolerance=args.tolerance,
+                  min_us=args.min_us)
+    for w in res.warnings:
+        print(f"[gate] WARNING: {w}")
+    for name, b, c, r in res.improvements:
+        print(f"[gate] improved: {name}  {b:.1f}us -> {c:.1f}us "
+              f"({r:.2f}x)")
+    for name, b, c, r in res.regressions:
+        print(f"[gate] REGRESSION: {name}  {b:.1f}us -> {c:.1f}us "
+              f"({r:.2f}x > {args.tolerance:.2f}x)")
+    verdict = "FAIL" if res.regressions else "ok"
+    print(f"[gate] {verdict}: {res.checked} rungs compared, "
+          f"{len(res.regressions)} regressions, "
+          f"{len(res.improvements)} improvements, "
+          f"{len(res.warnings)} warnings "
+          f"(tolerance {args.tolerance:.2f}x, floor {args.min_us:.0f}us)")
+    return 1 if res.regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

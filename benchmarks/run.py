@@ -17,6 +17,10 @@ import json
 import sys
 import traceback
 
+# --json payload schema version; benchmarks/gate.py validates it before
+# comparing runs, so bump it when the row shape changes.
+JSON_SCHEMA = 1
+
 MODULES = [
     ("fig3", "benchmarks.fig3_kernel_ladder"),
     ("multidir", "benchmarks.multidir_ladder"),
@@ -29,6 +33,20 @@ MODULES = [
     ("lm_step", "benchmarks.lm_step_bench"),
     ("serve_load", "benchmarks.serve_load"),
 ]
+
+
+def build_payload(rows, *, smoke: bool, only=None, failed=()) -> dict:
+    """The --json artifact: parsed CSV rows + run metadata.  One function
+    builds it (and the gate's loader validates it) so the schema cannot
+    drift between writer and reader."""
+    parsed = []
+    for line in rows:
+        name, us, derived = line.split(",", 2)
+        parsed.append({"name": name, "us_per_call": float(us),
+                       "derived": derived})
+    return {"schema": JSON_SCHEMA, "smoke": smoke,
+            "only": sorted(only or []), "failed": list(failed),
+            "rows": parsed}
 
 
 def main() -> None:
@@ -58,15 +76,11 @@ def main() -> None:
             traceback.print_exc()
 
     if args.json:
-        rows = []
-        for line in common.ROWS:
-            name, us, derived = line.split(",", 2)
-            rows.append({"name": name, "us_per_call": float(us),
-                         "derived": derived})
+        payload = build_payload(common.ROWS, smoke=args.smoke, only=only,
+                                failed=failed)
         with open(args.json, "w") as f:
-            json.dump({"smoke": args.smoke, "only": sorted(only or []),
-                       "failed": failed, "rows": rows}, f, indent=1)
-        print(f"[run] wrote {len(rows)} rows to {args.json}",
+            json.dump(payload, f, indent=1)
+        print(f"[run] wrote {len(payload['rows'])} rows to {args.json}",
               file=sys.stderr)
 
     if failed:

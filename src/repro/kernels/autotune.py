@@ -1,0 +1,479 @@
+"""Empirical kernel autotuner with a persistent cache (DESIGN.md §11).
+
+``kernels/tuning.py`` picks row tiles from a static VMEM model — correct
+admission, but blind to what the device actually prefers (the paper's §4.3
+occupancy balance is an *empirical* optimum: one warp per channel slice
+only wins when the tile shape matches the hardware).  This module closes
+the loop the way Triton-style kernels do: enumerate the admissible
+configs, **time them** under jit with proper warmup, and persist the
+winner to a JSON cache keyed by everything that changes the optimum —
+
+    (device_kind, H, W, C, direction, impl, stream dtype, carry dtype,
+     channel_shared)
+
+Resolution order at every launch site (``row_tile_for``):
+
+1. an explicit ``row_tile=`` argument always wins (never consults us);
+2. a cache hit — env-overridable path (``GSPN_TUNE_CACHE``) layered over
+   the checked-in seed cache (``tune_cache_seed.json``, recorded in CPU
+   interpret mode so CI exercises the hit path) — validated against the
+   shape (must divide H, fit the VMEM budget) before use;
+3. graceful fallback: the static heuristic ``tuning.pick_row_tile`` with
+   the same stream/carry byte accounting (unknown device, cache miss, or
+   a stale/invalid entry all land here, silently).
+
+The candidate enumerator is the single source of truth for what the tuner
+may emit; the oracle-conformance grid (``tests/test_conformance.py``)
+draws from the same enumerator, so any cache entry is by construction a
+config the conformance suite has proven safe.
+
+CLI (also the CI cache-artifact producer)::
+
+    PYTHONPATH=src python -m repro.kernels.autotune warm --out tune.json
+    PYTHONPATH=src python -m repro.kernels.autotune show
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import tuning
+
+ENV_CACHE_PATH = "GSPN_TUNE_CACHE"
+SEED_CACHE_PATH = pathlib.Path(__file__).with_name("tune_cache_seed.json")
+SCHEMA_VERSION = 1
+
+# Heuristic-fallback tile cap — matches gspn_scan.DEFAULT_ROW_TILE so a
+# cache miss reproduces the pre-tuner behaviour bit-for-bit.  Measured
+# candidates may explore beyond it (ENUM_CAP).
+DEFAULT_CAP = 256
+ENUM_CAP = 512
+
+# Per-direction kernel geometry: streamed operand count and VMEM carry
+# rows (the adjoint kernels hold three tap·adjoint rows, always f32 —
+# see gspn_scan._bwd_kernel / gspn_multidir._bwd_pair_kernel).
+DIRECTIONS = ("fwd", "bwd", "pair_fwd", "pair_bwd", "quad")
+_N_STREAMS = {"fwd": 6, "bwd": 5, "pair_fwd": 6, "pair_bwd": 5, "quad": 6}
+_CARRY_ROWS = {"fwd": 1, "bwd": 3, "pair_fwd": 1, "pair_bwd": 3, "quad": 1}
+
+# Injectable timer — tests monkeypatch this (or pass ``timer=``) to make
+# the measurement harness deterministic.
+_default_timer = time.perf_counter
+
+
+@functools.lru_cache(maxsize=4)
+def device_kind(interpret: bool = False) -> str:
+    """Normalised device cache key ('TPU v5e' → 'tpu-v5e').  Interpret-mode
+    runs (the CPU validation path) get their own namespace so interpreter
+    timings can never leak onto real silicon, and vice versa."""
+    kind = jax.devices()[0].device_kind.lower().replace(" ", "-")
+    return f"{kind}+interpret" if interpret else kind
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanKey:
+    """Everything that changes the empirical optimum of one scan launch."""
+    device: str
+    h: int                       # scan length (rows per carry segment)
+    w: int                       # lane width
+    c: int                       # G — flattened (batch, channel) planes
+    direction: str               # fwd | bwd | pair_fwd | pair_bwd | quad
+    impl: str                    # pallas | multidir
+    dtype: str                   # streamed dtype (operand tiles)
+    carry_dtype: str             # VMEM carry dtype (f32 under the policy)
+    channel_shared: bool         # compact channel propagation active
+
+    def __post_init__(self):
+        if self.direction not in DIRECTIONS:
+            raise ValueError(f"unknown direction {self.direction!r}; "
+                             f"expected one of {DIRECTIONS}")
+
+    def encode(self) -> str:
+        return (f"{self.device}|h{self.h}|w{self.w}|c{self.c}"
+                f"|{self.direction}|{self.impl}|{self.dtype}"
+                f"|carry-{self.carry_dtype}|cs{int(self.channel_shared)}")
+
+    @property
+    def stream_bytes(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    @property
+    def carry_bytes(self) -> int:
+        """VMEM-resident carry bytes per lane: carry rows × itemsize."""
+        return _CARRY_ROWS[self.direction] * jnp.dtype(self.carry_dtype).itemsize
+
+    @property
+    def n_streams(self) -> int:
+        return _N_STREAMS[self.direction]
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One tunable layout.  ``row_tile`` is the knob that reaches the
+    kernel (rows per sequential grid step — the grid split is ``h //
+    row_tile``); ``double_buffer`` is the admission layout: True reserves
+    prefetch headroom for pipelining (the safe default), False admits
+    larger tiles that fit only single-buffered (the aggressive layout the
+    measurement decides on)."""
+    row_tile: int
+    double_buffer: bool = True
+
+    def working_set(self, key: ScanKey) -> int:
+        return tuning.scan_working_set(
+            self.row_tile, key.w, key.stream_bytes, key.n_streams,
+            double_buffer=self.double_buffer,
+            carry_dtype_bytes=key.carry_bytes)
+
+
+def enumerate_candidates(key: ScanKey, *,
+                         vmem_budget: int = tuning.VMEM_BYTES,
+                         cap: int = ENUM_CAP) -> list[Candidate]:
+    """All configs the tuner may time (and therefore emit) for ``key``:
+    power-of-two divisors of the scan length whose working set fits the
+    VMEM budget — double-buffered where possible, single-buffered as the
+    aggressive extension.  Deduplicated on ``row_tile`` (the knob that
+    reaches the kernel), keeping the double-buffered admission label."""
+    out: list[Candidate] = []
+    seen: set[int] = set()
+    t = 1
+    while t <= cap and key.h % t == 0:
+        for db in (True, False):
+            cand = Candidate(row_tile=t, double_buffer=db)
+            if t not in seen and cand.working_set(key) <= vmem_budget:
+                seen.add(t)
+                out.append(cand)
+        t *= 2
+    return out
+
+
+def heuristic_row_tile(key: ScanKey, *, cap: int = DEFAULT_CAP,
+                       vmem_budget: int = tuning.VMEM_BYTES) -> int:
+    """The static-VMEM-model fallback — identical accounting to the
+    pre-tuner call sites (cache miss ⇒ unchanged behaviour)."""
+    return tuning.pick_row_tile(
+        key.h, key.w, key.stream_bytes, vmem_budget=vmem_budget, cap=cap,
+        n_streams=key.n_streams, carry_dtype_bytes=key.carry_bytes).row_tile
+
+
+# ---------------------------------------------------------------------------
+# Persistent cache.
+# ---------------------------------------------------------------------------
+
+class TuningCache:
+    """JSON-backed ``key.encode() -> entry`` map.
+
+    Entries are plain dicts: ``{"row_tile", "double_buffer", "us",
+    "n_grid_steps", "working_set_bytes", "source"}``.  Corrupt or
+    missing files load as empty caches (the tuner must never take the
+    serving path down)."""
+
+    def __init__(self, entries: dict | None = None,
+                 path: str | os.PathLike | None = None):
+        self.entries: dict[str, dict] = dict(entries or {})
+        self.path = pathlib.Path(path) if path else None
+
+    @classmethod
+    def load(cls, path) -> "TuningCache":
+        path = pathlib.Path(path)
+        try:
+            payload = json.loads(path.read_text())
+            entries = payload.get("entries", {})
+            if not isinstance(entries, dict):
+                raise ValueError("entries is not a mapping")
+        except (OSError, ValueError, json.JSONDecodeError) as exc:
+            print(f"[autotune] ignoring unreadable cache {path}: {exc!r}",
+                  file=sys.stderr)
+            entries = {}
+        return cls(entries, path=path)
+
+    def save(self, path=None) -> pathlib.Path:
+        path = pathlib.Path(path) if path else self.path
+        if path is None:
+            raise ValueError("no cache path to save to")
+        payload = {"schema": SCHEMA_VERSION, "entries": self.entries}
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+        self.path = path
+        return path
+
+    def lookup(self, key: ScanKey) -> dict | None:
+        return self.entries.get(key.encode())
+
+    def store(self, key: ScanKey, entry: dict):
+        self.entries[key.encode()] = dict(entry)
+
+    def merge(self, other: "TuningCache"):
+        self.entries.update(other.entries)
+
+    def __len__(self):
+        return len(self.entries)
+
+
+_CACHE: TuningCache | None = None
+
+
+def get_cache(reload: bool = False) -> TuningCache:
+    """Process-global cache: checked-in seed, overlaid (entries win) by
+    the ``GSPN_TUNE_CACHE`` path when set."""
+    global _CACHE
+    if _CACHE is None or reload:
+        cache = (TuningCache.load(SEED_CACHE_PATH)
+                 if SEED_CACHE_PATH.exists() else TuningCache())
+        env = os.environ.get(ENV_CACHE_PATH)
+        if env:
+            cache.merge(TuningCache.load(env))
+            cache.path = pathlib.Path(env)
+        _CACHE = cache
+    return _CACHE
+
+
+def load_cache(path) -> int:
+    """Layer an explicit cache file over the global cache (the launchers'
+    ``--tune-cache`` flag).  Returns the number of entries loaded."""
+    extra = TuningCache.load(path)
+    cache = get_cache()
+    cache.merge(extra)
+    cache.path = extra.path
+    return len(extra)
+
+
+def _entry_valid(key: ScanKey, entry: dict, *,
+                 vmem_budget: int = tuning.VMEM_BYTES) -> bool:
+    """A cache entry is honoured only if it is still safe for the shape:
+    a power-of-two row tile dividing H whose minimal (single-buffered)
+    working set fits the budget.  Anything else falls back silently."""
+    try:
+        t = int(entry["row_tile"])
+    except (KeyError, TypeError, ValueError):
+        return False
+    if t < 1 or (t & (t - 1)) or key.h % t:
+        return False
+    return Candidate(t, double_buffer=False).working_set(key) <= vmem_budget
+
+
+def row_tile_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
+                 impl: str = "pallas", dtype="float32",
+                 carry_dtype="float32", channel_shared: bool = False,
+                 interpret: bool = False, cache: TuningCache | None = None,
+                 cap: int = DEFAULT_CAP) -> int:
+    """THE launch-site entry point: tuned row tile if the cache knows this
+    (device, shape, direction, dtype-policy) key, heuristic otherwise.
+
+    Every fused-scan launch (fwd, bwd, pair, quad — and through them the
+    chunked-prefill and sp block-local paths) funnels here, so one cache
+    governs the whole stack."""
+    key = ScanKey(device_kind(interpret), h, w, c, direction, impl,
+                  str(jnp.dtype(dtype)), str(jnp.dtype(carry_dtype)),
+                  bool(channel_shared))
+    cache = cache if cache is not None else get_cache()
+    entry = cache.lookup(key)
+    if entry is not None and _entry_valid(key, entry):
+        return int(entry["row_tile"])
+    return heuristic_row_tile(key, cap=cap)
+
+
+# ---------------------------------------------------------------------------
+# Measurement harness.
+# ---------------------------------------------------------------------------
+
+def measure(fn, *, iters: int = 3, warmup: int = 1, timer=None) -> float:
+    """Median wall seconds of ``fn()`` with ``block_until_ready``.
+    ``timer`` is injectable (defaults to the module's ``_default_timer``)
+    so tests can drive the harness deterministically."""
+    timer = timer or _default_timer
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = timer()
+        jax.block_until_ready(fn())
+        times.append(timer() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _make_operands(key: ScanKey, seed: int = 0):
+    """Synthetic operands matching the key's layout.  Taps are softmaxed
+    per position (row-stochastic-ish) so timings run on realistic
+    magnitudes; the tuner never checks numerics — the conformance grid
+    owns that."""
+    dtype = jnp.dtype(key.dtype)
+    g = max(key.c, 1)
+    gw = 1 if key.channel_shared else g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (g, key.h, key.w), jnp.float32)
+    lam = jax.nn.sigmoid(
+        jax.random.normal(ks[1], (g, key.h, key.w), jnp.float32))
+    taps = jax.nn.softmax(
+        jax.random.normal(ks[2], (gw, key.h, key.w, 3), jnp.float32), axis=-1)
+    wl, wc, wr = taps[..., 0], taps[..., 1], taps[..., 2]
+    cast = lambda a: a.astype(dtype)
+    return tuple(map(cast, (x, wl, wc, wr, lam))), g // gw
+
+
+def default_runner_factory(key: ScanKey, *, interpret: bool = True,
+                           seed: int = 0):
+    """Builds, per candidate, a zero-arg jitted launch of the ACTUAL
+    kernel the key describes (lazy kernel imports — this module is
+    imported by the kernels themselves)."""
+    from repro.kernels import gspn_multidir as _mk
+    from repro.kernels import gspn_scan as _pk
+
+    (x, wl, wc, wr, lam), cpw = _make_operands(key, seed)
+    carry = jnp.dtype(key.carry_dtype)
+
+    def factory(cand: Candidate):
+        t = cand.row_tile
+        if key.direction == "fwd":
+            run = jax.jit(lambda *a: _pk.gspn_scan_fwd_pallas(
+                *a, channels_per_weight=cpw, row_tile=t,
+                interpret=interpret, carry_dtype=carry))
+            args = (x, wl, wc, wr, lam)
+        elif key.direction == "bwd":
+            run = jax.jit(lambda *a: _pk.gspn_scan_bwd_pallas(
+                *a, channels_per_weight=cpw, row_tile=t,
+                interpret=interpret))
+            args = (x, wl, wc, wr)          # x stands in for dy
+        elif key.direction == "pair_fwd":
+            pair = lambda a: jnp.stack([a, a])
+            run = jax.jit(lambda xx, l2, w2, c2, r2: _mk.gspn_scan_bidir_pallas(
+                xx, {"wl": w2, "wc": c2, "wr": r2}, l2,
+                channels_per_weight=cpw, row_tile=t,
+                interpret=interpret, carry_dtype=carry))
+            args = (x, pair(lam), pair(wl), pair(wc), pair(wr))
+        elif key.direction == "pair_bwd":
+            pair = lambda a: jnp.stack([a, a])
+            run = jax.jit(lambda d2, w2, c2, r2: _mk.gspn_scan_bidir_bwd_pallas(
+                d2, w2, c2, r2, channels_per_weight=cpw, row_tile=t,
+                interpret=interpret))
+            args = (pair(x), pair(wl), pair(wc), pair(wr))
+        elif key.direction == "quad":
+            quad = lambda a: jnp.stack([a] * 4)
+            run = jax.jit(lambda xx, l4, w4, c4, r4: _mk.gspn_scan_quad_pallas(
+                xx, {"wl": w4, "wc": c4, "wr": r4}, l4,
+                channels_per_weight=cpw, row_tile=t,
+                interpret=interpret, carry_dtype=carry))
+            args = (x, quad(lam), quad(wl), quad(wc), quad(wr))
+        else:  # pragma: no cover — ScanKey.__post_init__ guards this
+            raise ValueError(key.direction)
+        return lambda: run(*args)
+
+    return factory
+
+
+def autotune_key(key: ScanKey, *, candidates=None, iters: int = 3,
+                 warmup: int = 1, cache: TuningCache | None = None,
+                 timer=None, runner_factory=None,
+                 interpret: bool = True) -> dict:
+    """Time every candidate for ``key`` and cache the winner.
+
+    The candidate list always contains the heuristic's choice (the
+    enumerator admits every tile the heuristic may pick), so the measured
+    winner is never slower than the heuristic beyond timing noise.
+    Returns the stored entry; ties break toward the first (smallest,
+    double-buffered) candidate, making the harness deterministic under a
+    fixed candidate list and timer.
+    """
+    cands = list(candidates if candidates is not None
+                 else enumerate_candidates(key))
+    cache = cache if cache is not None else get_cache()
+    if not cands:
+        entry = {"row_tile": heuristic_row_tile(key), "double_buffer": True,
+                 "us": None, "n_grid_steps": None, "working_set_bytes": None,
+                 "source": "heuristic"}
+        cache.store(key, entry)
+        return entry
+    if runner_factory is None:
+        runner_factory = default_runner_factory(key, interpret=interpret)
+
+    timed: list[tuple[float, Candidate]] = []
+    for cand in cands:
+        fn = runner_factory(cand)
+        us = measure(fn, iters=iters, warmup=warmup, timer=timer) * 1e6
+        timed.append((us, cand))
+    best_us, best = min(timed, key=lambda r: r[0])
+    entry = {
+        "row_tile": best.row_tile,
+        "double_buffer": best.double_buffer,
+        "us": round(best_us, 3),
+        "n_grid_steps": key.h // best.row_tile,
+        "working_set_bytes": best.working_set(key),
+        "source": "measured",
+    }
+    cache.store(key, entry)
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Warm list + CLI (the CI tuning-cache artifact producer).
+# ---------------------------------------------------------------------------
+
+# (h, w, c, direction, impl, dtype, channel_shared) — the smoke-ladder and
+# test shapes; carry follows the §10 policy (f32; adjoints are always f32).
+WARM_SPECS = [
+    (64, 64, 8, "fwd", "pallas", "float32", True),
+    (64, 64, 8, "fwd", "pallas", "bfloat16", True),
+    (64, 64, 8, "bwd", "pallas", "float32", True),
+    (64, 64, 8, "pair_fwd", "multidir", "float32", True),
+    (128, 128, 8, "fwd", "pallas", "float32", True),
+    (128, 128, 8, "fwd", "pallas", "bfloat16", True),
+    (128, 128, 8, "bwd", "pallas", "float32", True),
+    (128, 128, 8, "pair_fwd", "multidir", "float32", True),
+    (128, 128, 8, "pair_bwd", "multidir", "float32", True),
+    (192, 192, 8, "fwd", "pallas", "float32", True),
+]
+
+
+def warm(specs=None, *, cache: TuningCache | None = None, iters: int = 2,
+         warmup: int = 1, interpret: bool = True, verbose: bool = True):
+    """Tune every spec on the current device and return the cache."""
+    cache = cache if cache is not None else get_cache()
+    for h, w, c, direction, impl, dtype, cs in (specs or WARM_SPECS):
+        key = ScanKey(device_kind(interpret), h, w, c, direction, impl,
+                      str(jnp.dtype(dtype)), "float32", cs)
+        entry = autotune_key(key, iters=iters, warmup=warmup, cache=cache,
+                             interpret=interpret)
+        if verbose:
+            print(f"[autotune] {key.encode()} -> row_tile="
+                  f"{entry['row_tile']} ({entry['us']}us)", file=sys.stderr)
+    return cache
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.kernels.autotune")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_warm = sub.add_parser("warm", help="measure the built-in warm list")
+    ap_warm.add_argument("--out", default="",
+                         help="write the cache here (default: seed path)")
+    ap_warm.add_argument("--iters", type=int, default=2)
+    sub.add_parser("show", help="print the resolved cache")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "warm":
+        # Measure into a FRESH cache: the artifact must contain only this
+        # device's fresh measurements, never the layered seed/env entries.
+        cache = warm(cache=TuningCache(), iters=args.iters)
+        path = cache.save(args.out or SEED_CACHE_PATH)
+        print(f"[autotune] wrote {len(cache)} entries to {path}")
+        return 0
+    if args.cmd == "show":
+        cache = get_cache(reload=True)
+        print(json.dumps({"schema": SCHEMA_VERSION,
+                          "entries": cache.entries}, indent=1,
+                         sort_keys=True))
+        return 0
+    return 2  # pragma: no cover
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,20 +42,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.gspn_scan import (DEFAULT_ROW_TILE, CompilerParams, _row,
-                                     _shift_left, _shift_right)
-from repro.kernels.tuning import pick_row_tile as _pick_tile
+from repro.kernels import autotune
+from repro.kernels.gspn_scan import (CompilerParams, _row, _shift_left,
+                                     _shift_right)
 
 
-def _pair_row_tile(h: int, w: int, dtype_bytes: int, n_streams: int,
-                   carry_dtype_bytes: int = 4) -> int:
-    """VMEM-aware tile for the fused pair kernels (DESIGN.md §2); shares
-    the single-direction kernels' cap so fused/unfused tile identically.
-    ``dtype_bytes`` is the streamed dtype (bf16 halves the working set);
-    ``carry_dtype_bytes`` the VMEM carry's."""
-    return _pick_tile(h, w, dtype_bytes, cap=DEFAULT_ROW_TILE,
-                      n_streams=n_streams,
-                      carry_dtype_bytes=carry_dtype_bytes).row_tile
+def _pair_row_tile(h: int, w: int, c: int, direction: str, dtype,
+                   carry_dtype=jnp.float32, *, channel_shared: bool = False,
+                   interpret: bool = True) -> int:
+    """Tile for the fused pair/quad kernels: measured cache entry when the
+    tuner knows this (device, shape, direction, dtype-policy) key,
+    VMEM-heuristic fallback otherwise (DESIGN.md §11).  The fallback
+    shares the single-direction kernels' cap so fused/unfused tile
+    identically on a cache miss."""
+    return autotune.row_tile_for(
+        h, w, c=c, direction=direction, impl="multidir", dtype=dtype,
+        carry_dtype=carry_dtype, channel_shared=channel_shared,
+        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -100,7 +103,8 @@ def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
     cpw = channels_per_weight
     carry_dtype = jnp.dtype(carry_dtype)
     row_tile = row_tile or _pair_row_tile(
-        h, w, x.dtype.itemsize, 6, carry_dtype_bytes=carry_dtype.itemsize)
+        h, w, g, "pair_fwd", x.dtype, carry_dtype,
+        channel_shared=cpw > 1, interpret=interpret)
     assert h % row_tile == 0
     n_tiles = h // row_tile
 
@@ -186,9 +190,11 @@ def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
     _, g_dim, h, w = dy2.shape
     cpw = channels_per_weight
     # Streamed dtype is dy2's (bf16 tiles halve the working set); the
-    # adjoint carry is three f32 tap·adjoint rows regardless of policy.
-    row_tile = row_tile or _pair_row_tile(h, w, dy2.dtype.itemsize, 5,
-                                          carry_dtype_bytes=3 * 4)
+    # adjoint carry is three f32 tap·adjoint rows regardless of policy
+    # (encoded by the tuner's "pair_bwd" direction).
+    row_tile = row_tile or _pair_row_tile(
+        h, w, g_dim, "pair_bwd", dy2.dtype,
+        channel_shared=cpw > 1, interpret=interpret)
     assert h % row_tile == 0
     n_tiles = h // row_tile
 
@@ -246,7 +252,8 @@ def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
     cpw = channels_per_weight
     carry_dtype = jnp.dtype(carry_dtype)
     row_tile = row_tile or _pair_row_tile(
-        h, w, x.dtype.itemsize, 6, carry_dtype_bytes=carry_dtype.itemsize)
+        h, w, g, "quad", x.dtype, carry_dtype,
+        channel_shared=cpw > 1, interpret=interpret)
     assert h % row_tile == 0
     n_tiles = h // row_tile
 

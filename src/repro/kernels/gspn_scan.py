@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tuning
+from repro.kernels import autotune, tuning
 
 # jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x; accept
 # either so the kernels run on the container's pinned jax.
@@ -48,13 +48,16 @@ DEFAULT_ROW_TILE = 256
 def pick_row_tile(h: int, cap: int = DEFAULT_ROW_TILE, *, w: int = 128,
                   dtype_bytes: int = 4, n_streams: int = 6,
                   carry_dtype_bytes: int = 4) -> int:
-    """Row-tile choice for the fused scan kernels.
+    """Heuristic row-tile choice (the tuner's fallback tier).
 
     Thin wrapper (old signature preserved) over the single VMEM-aware
     implementation in :func:`repro.kernels.tuning.pick_row_tile`: largest
     power-of-two divisor of ``h`` not exceeding ``cap`` whose streamed
     working set fits the VMEM budget.  ``dtype_bytes`` is the STREAMED
-    dtype; ``carry_dtype_bytes`` the VMEM carry's.
+    dtype; ``carry_dtype_bytes`` the VMEM carry's.  Launch sites no longer
+    call this directly — they go through ``autotune.row_tile_for``, which
+    prefers a measured cache entry and falls back to this accounting
+    (DESIGN.md §11).
     """
     return tuning.pick_row_tile(h, w, dtype_bytes, cap=cap,
                                 n_streams=n_streams,
@@ -124,9 +127,10 @@ def gspn_scan_fwd_pallas(x, wl, wc, wr, lam, *, channels_per_weight: int = 1,
     chunk = h if chunk is None else chunk
     assert h % chunk == 0, (h, chunk)
     carry_dtype = jnp.dtype(carry_dtype)
-    row_tile = row_tile or pick_row_tile(
-        min(h, chunk), w=w, dtype_bytes=x.dtype.itemsize,
-        carry_dtype_bytes=carry_dtype.itemsize)
+    row_tile = row_tile or autotune.row_tile_for(
+        min(h, chunk), w, c=g, direction="fwd", impl="pallas",
+        dtype=x.dtype, carry_dtype=carry_dtype,
+        channel_shared=cpw > 1, interpret=interpret)
     assert chunk % row_tile == 0, (chunk, row_tile)
     chunk_tiles = chunk // row_tile
 
@@ -195,11 +199,12 @@ def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, channels_per_weight: int = 1,
     assert h % chunk == 0, (h, chunk)
     # The streamed operands are dy + the three taps (their real dtype —
     # bf16 streams unlock 2× larger row tiles); the adjoint carry is three
-    # f32 tap·adjoint rows regardless of the policy.
-    row_tile = row_tile or pick_row_tile(min(h, chunk), w=w,
-                                         dtype_bytes=dy.dtype.itemsize,
-                                         n_streams=5,
-                                         carry_dtype_bytes=3 * 4)
+    # f32 tap·adjoint rows regardless of the policy (the tuner's "bwd"
+    # direction encodes both the 5-stream count and the 3-row carry).
+    row_tile = row_tile or autotune.row_tile_for(
+        min(h, chunk), w, c=g_dim, direction="bwd", impl="pallas",
+        dtype=dy.dtype, carry_dtype=jnp.float32,
+        channel_shared=cpw > 1, interpret=interpret)
     chunk_tiles = chunk // row_tile
 
     dy_f = jnp.flip(dy, axis=1)

@@ -49,6 +49,9 @@ from repro.kernels import ref as _ref
 class ScanConfig:
     impl: str = "auto"           # auto | pallas | multidir | xla | per_step
     channels_per_weight: int = 1
+    # None => each Pallas launch site resolves its tile through the
+    # autotuner (measured cache entry, VMEM-heuristic fallback —
+    # DESIGN.md §11); an explicit value always wins.
     row_tile: int | None = None
     interpret: bool = True
     # Mixed-precision policy (DESIGN.md §10): streamed tiles take the
@@ -182,7 +185,8 @@ def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
         return gspn_scan_sp(x, wl, wc, wr, lam, mesh=mesh,
                             axis_name=seq_axis, strategy=sp_strategy,
                             row_tile=row_tile, interpret=interpret,
-                            chunk=chunk, boundary_dtype=sp_boundary_dtype)
+                            chunk=chunk, boundary_dtype=sp_boundary_dtype,
+                            carry_dtype=carry_dtype)
     g, h, w = x.shape
     gw = wl.shape[0]
     assert g % gw == 0, (g, gw)

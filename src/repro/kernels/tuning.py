@@ -64,3 +64,37 @@ def pick_row_tile(h: int, w: int, dtype_bytes: int = 4,
                           best, w, dtype_bytes, n_streams,
                           carry_dtype_bytes=carry_dtype_bytes),
                       n_grid_steps=h // best)
+
+
+# ---------------------------------------------------------------------------
+# Precision-policy routing (DESIGN.md §10/§11).
+#
+# Call sites must not guess byte widths: the streamed itemsize follows the
+# policy's compute dtype and the carry itemsize its carry dtype.  This is
+# the fix for the sites that passed dtype_bytes=4 regardless of the
+# active policy (benchmarks, sp) — they now resolve a named preset here.
+# ---------------------------------------------------------------------------
+
+def policy_itemsizes(precision) -> tuple[int, int]:
+    """(streamed_bytes, carry_bytes) for a ``configs.base`` precision
+    preset name or Precision instance."""
+    import jax.numpy as jnp
+
+    from repro.configs.base import resolve_precision  # lazy: configs
+    p = resolve_precision(precision)                  # import kernels
+    return (jnp.dtype(p.compute_dtype).itemsize,
+            jnp.dtype(p.carry_dtype).itemsize)
+
+
+def pick_row_tile_for_policy(h: int, w: int, precision,
+                             vmem_budget: int = VMEM_BYTES, cap: int = 512,
+                             n_streams: int = 6) -> TileChoice:
+    """``pick_row_tile`` with stream/carry bytes resolved from the
+    mixed-precision policy instead of hand-passed constants.
+
+    NOTE: the launch-site heuristic fallback caps at
+    ``autotune.DEFAULT_CAP`` (256); pass ``cap=autotune.DEFAULT_CAP``
+    when reporting what a launch's fallback would pick."""
+    stream_b, carry_b = policy_itemsizes(precision)
+    return pick_row_tile(h, w, stream_b, vmem_budget=vmem_budget, cap=cap,
+                         n_streams=n_streams, carry_dtype_bytes=carry_b)

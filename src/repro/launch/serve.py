@@ -58,8 +58,18 @@ def main():
                     choices=[""] + sorted(PRECISIONS),
                     help="mixed-precision policy for the served model "
                          "(params/compute/carries, DESIGN.md §10)")
+    ap.add_argument("--tune-cache", default="",
+                    help="kernel tuning cache JSON (DESIGN.md §11), "
+                         "layered over the checked-in seed cache; every "
+                         "GSPN launch in the engine then uses measured "
+                         "row tiles instead of the VMEM heuristic")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
+
+    if args.tune_cache:
+        from repro.kernels.autotune import load_cache
+        n = load_cache(args.tune_cache)
+        print(f"[serve] tuning cache: {n} entries from {args.tune_cache}")
 
     entry = get_arch(args.arch)
     cfg = entry.reduced() if args.reduced else entry.full()

@@ -50,8 +50,18 @@ def main():
                          "with dynamic loss scaling")
     ap.add_argument("--distributed", action="store_true",
                     help="initialise jax.distributed from env (multi-host)")
+    ap.add_argument("--tune-cache", default="",
+                    help="kernel tuning cache JSON (DESIGN.md §11), "
+                         "layered over the checked-in seed cache; fwd/bwd "
+                         "GSPN launches in the train step then use "
+                         "measured row tiles instead of the VMEM heuristic")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+
+    if args.tune_cache:
+        from repro.kernels.autotune import load_cache
+        logging.info("tuning cache: %d entries from %s",
+                     load_cache(args.tune_cache), args.tune_cache)
 
     if args.distributed:
         jax.distributed.initialize()

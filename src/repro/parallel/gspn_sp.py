@@ -91,6 +91,10 @@ class SPConfig:
     channels_per_weight: int = 1
     row_tile: int | None = None
     interpret: bool = True
+    # VMEM carry dtype of the block-local fused kernel (DESIGN.md §10);
+    # with row_tile=None it also keys the tuner lookup for the block-local
+    # launch (DESIGN.md §11), so the sp path shares the one tuning cache.
+    carry_dtype: str = "float32"
     # Wire dtype of the boundary exchange (DESIGN.md §10): the (T, b)
     # payloads are cast to this before every collective hop; the
     # associative composition itself always runs in f32.  bf16 halves the
@@ -187,7 +191,8 @@ def _local_scan(cfg: SPConfig, x, wl, wc, wr, lam, *, reverse: bool):
         return _pk.gspn_scan_fwd_pallas(
             x, wl, wc, wr, lam,
             channels_per_weight=cfg.channels_per_weight,
-            row_tile=cfg.row_tile, interpret=cfg.interpret)
+            row_tile=cfg.row_tile, interpret=cfg.interpret,
+            carry_dtype=jnp.dtype(cfg.carry_dtype))
     # Reverse-direction local scans (the adjoint pass) go through the XLA
     # fused-scan oracle — same recurrence, reversed row walk.
     return _ref.gspn_scan_ref(x, wl, wc, wr, lam, reverse=reverse)
@@ -349,7 +354,7 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
                  strategy: str = "auto", inner_impl: str = "auto",
                  row_tile: int | None = None, interpret: bool = True,
                  chunk: int | None = None, batch_axes=None,
-                 boundary_dtype=None):
+                 boundary_dtype=None, carry_dtype=None):
     """Spatially-sharded GSPN line scan (``impl="sp"``).
 
     Same semantics and layout as :func:`repro.kernels.ops.gspn_scan` —
@@ -357,6 +362,10 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
     partitioned into contiguous blocks over the ``axis_name`` mesh axis.
     ``boundary_dtype`` (default f32) is the wire dtype of the boundary
     exchange payloads; composition always runs in f32 (DESIGN.md §10).
+    ``carry_dtype`` (default f32) is the block-local fused kernel's VMEM
+    carry dtype; it follows the active precision policy rather than a
+    hard-coded f32 so the tuner keys the block-local launch correctly
+    (DESIGN.md §11).
     Differentiable in all tensor args (custom_vjp; the backward pass
     reverses the exchange direction).  H need not divide the axis size.
 
@@ -384,7 +393,9 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
         # already embarrassingly parallel and sp adds nothing to it.
         from repro.kernels.ops import gspn_scan
         return gspn_scan(x, wl, wc, wr, lam, chunk=chunk, impl="auto",
-                         row_tile=row_tile, interpret=interpret)
+                         row_tile=row_tile, interpret=interpret,
+                         carry_dtype=(carry_dtype if carry_dtype is not None
+                                      else "float32"))
 
     g, h_dim, w = x.shape
     gw = wl.shape[0]
@@ -402,6 +413,9 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
                    inner_impl=_resolve_inner(inner_impl),
                    channels_per_weight=g // gw, row_tile=row_tile,
                    interpret=interpret,
+                   carry_dtype=str(jnp.dtype(
+                       carry_dtype if carry_dtype is not None
+                       else jnp.float32)),
                    boundary_dtype=str(jnp.dtype(
                        boundary_dtype if boundary_dtype is not None
                        else jnp.float32)))

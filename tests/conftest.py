@@ -36,6 +36,10 @@ def pytest_configure(config):
         "markers",
         "serve: continuous-batching engine / chunked-prefill / cache-pool "
         "tests on tiny configs (pytest -m serve)")
+    config.addinivalue_line(
+        "markers",
+        "bench: benchmark --json schema and perf-regression-gate tests "
+        "(pytest -m bench)")
 
 
 @pytest.fixture(scope="session", autouse=True)

@@ -1,0 +1,315 @@
+"""Autotuner unit tests (DESIGN.md §11): cache round-trip and layering,
+graceful fallback to the static heuristic, deterministic measurement under
+an injected timer, VMEM-budget candidate admission (including the PR-4
+bf16-carry byte accounting), and the precision-policy routing of the
+static picker."""
+
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import PRECISIONS, resolve_precision
+from repro.kernels import autotune as A
+from repro.kernels import tuning
+
+pytestmark = pytest.mark.kernels
+
+
+def _key(**kw):
+    base = dict(device="testdev", h=64, w=32, c=4, direction="fwd",
+                impl="pallas", dtype="float32", carry_dtype="float32",
+                channel_shared=True)
+    base.update(kw)
+    return A.ScanKey(**base)
+
+
+# ---------------------------------------------------------------------------
+# Cache persistence.
+# ---------------------------------------------------------------------------
+
+def test_cache_roundtrips_to_disk(tmp_path):
+    cache = A.TuningCache()
+    k1, k2 = _key(), _key(direction="bwd", dtype="bfloat16")
+    e1 = {"row_tile": 16, "double_buffer": True, "us": 12.5,
+          "n_grid_steps": 4, "working_set_bytes": 1024,
+          "source": "measured"}
+    e2 = dict(e1, row_tile=8, us=99.0)
+    cache.store(k1, e1)
+    cache.store(k2, e2)
+    path = cache.save(tmp_path / "cache.json")
+
+    fresh = A.TuningCache.load(path)
+    assert len(fresh) == 2
+    assert fresh.lookup(k1) == e1
+    assert fresh.lookup(k2) == e2
+    # distinct keys stay distinct under encode()
+    assert k1.encode() != k2.encode()
+
+
+def test_corrupt_or_missing_cache_loads_empty(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert len(A.TuningCache.load(bad)) == 0
+    assert len(A.TuningCache.load(tmp_path / "nope.json")) == 0
+    # wrong payload shape is also tolerated
+    bad.write_text(json.dumps({"entries": [1, 2]}))
+    assert len(A.TuningCache.load(bad)) == 0
+
+
+def test_env_cache_layers_over_seed(tmp_path, monkeypatch):
+    k = _key(device=A.device_kind(True), h=32)
+    extra = A.TuningCache()
+    extra.store(k, {"row_tile": 2, "double_buffer": True, "us": 1.0,
+                    "n_grid_steps": 16, "working_set_bytes": 64,
+                    "source": "measured"})
+    path = extra.save(tmp_path / "overlay.json")
+    monkeypatch.setenv(A.ENV_CACHE_PATH, str(path))
+    try:
+        cache = A.get_cache(reload=True)
+        assert cache.lookup(k)["row_tile"] == 2
+        assert A.row_tile_for(32, k.w, c=k.c, direction="fwd",
+                              dtype="float32", channel_shared=True,
+                              interpret=True) == 2
+    finally:
+        monkeypatch.delenv(A.ENV_CACHE_PATH)
+        A.get_cache(reload=True)        # restore the unlayered global
+
+
+# ---------------------------------------------------------------------------
+# Lookup / fallback ladder.
+# ---------------------------------------------------------------------------
+
+def test_miss_falls_back_to_heuristic_without_error():
+    empty = A.TuningCache()
+    got = A.row_tile_for(64, 32, c=4, direction="fwd", dtype="float32",
+                         channel_shared=True, cache=empty)
+    want = tuning.pick_row_tile(64, 32, 4, cap=A.DEFAULT_CAP,
+                                n_streams=6, carry_dtype_bytes=4).row_tile
+    assert got == want
+    # and matches the legacy gspn_scan wrapper's accounting exactly
+    from repro.kernels.gspn_scan import pick_row_tile as wrapper
+    assert got == wrapper(64, w=32, dtype_bytes=4)
+
+
+def test_unknown_device_entry_is_a_miss():
+    cache = A.TuningCache()
+    cache.store(_key(device="tpu-v99"), {"row_tile": 2})
+    got = A.row_tile_for(64, 32, c=4, direction="fwd", dtype="float32",
+                         channel_shared=True, cache=cache)
+    # the current device key differs, so the entry never matches
+    assert got == tuning.pick_row_tile(64, 32, 4, cap=A.DEFAULT_CAP,
+                                       n_streams=6).row_tile
+
+
+def test_hit_overrides_heuristic():
+    key = _key(device=A.device_kind(False))
+    cache = A.TuningCache()
+    cache.store(key, {"row_tile": 2, "double_buffer": True, "us": 1.0,
+                      "n_grid_steps": 32, "working_set_bytes": 64,
+                      "source": "measured"})
+    got = A.row_tile_for(key.h, key.w, c=key.c, direction="fwd",
+                         dtype="float32", channel_shared=True, cache=cache)
+    assert got == 2  # not the heuristic's 64
+
+
+@pytest.mark.parametrize("bad_entry", [
+    {"row_tile": 3},            # not a power of two
+    {"row_tile": 48},           # does not divide h=64
+    {"row_tile": 0},
+    {"row_tile": "wat"},
+    {},
+])
+def test_invalid_cache_entry_falls_back(bad_entry):
+    key = _key(device=A.device_kind(False))
+    cache = A.TuningCache()
+    cache.store(key, bad_entry)
+    got = A.row_tile_for(key.h, key.w, c=key.c, direction="fwd",
+                         dtype="float32", channel_shared=True, cache=cache)
+    assert got == A.heuristic_row_tile(key)
+
+
+def test_oversized_cache_entry_falls_back():
+    """A tile whose minimal working set exceeds VMEM is rejected even if
+    it divides the scan length (stale entry from a bigger device)."""
+    key = _key(device=A.device_kind(False), h=1 << 20, w=8192)
+    cache = A.TuningCache()
+    cache.store(key, {"row_tile": 1 << 19})
+    assert not A._entry_valid(key, {"row_tile": 1 << 19})
+    got = A.row_tile_for(key.h, key.w, c=key.c, direction="fwd",
+                         dtype="float32", channel_shared=True, cache=cache)
+    assert got == A.heuristic_row_tile(key)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic measurement harness.
+# ---------------------------------------------------------------------------
+
+def _scripted(costs):
+    """(runner_factory, timer): the runner records which candidate is
+    'executing'; the timer advances a fake clock by that candidate's cost
+    per reading."""
+    state = {"rt": None, "t": 0.0}
+
+    def factory(cand):
+        def fn():
+            state["rt"] = cand.row_tile
+        return fn
+
+    def timer():
+        state["t"] += costs[state["rt"]]
+        return state["t"]
+
+    return factory, timer
+
+
+def test_autotune_deterministic_under_scripted_timer():
+    key = _key()
+    cands = [A.Candidate(4), A.Candidate(8), A.Candidate(16)]
+    factory, timer = _scripted({4: 5.0, 8: 1.0, 16: 3.0})
+    cache = A.TuningCache()
+    e1 = A.autotune_key(key, candidates=cands, cache=cache,
+                        runner_factory=factory, timer=timer)
+    assert e1["row_tile"] == 8
+    assert e1["source"] == "measured"
+    assert e1["n_grid_steps"] == key.h // 8
+
+    # identical inputs => identical winner (fresh scripted state)
+    factory, timer = _scripted({4: 5.0, 8: 1.0, 16: 3.0})
+    e2 = A.autotune_key(key, candidates=cands, cache=A.TuningCache(),
+                        runner_factory=factory, timer=timer)
+    assert e2 == e1
+
+
+def test_autotune_tie_breaks_to_first_candidate():
+    key = _key()
+    cands = [A.Candidate(4), A.Candidate(8)]
+    factory, timer = _scripted({4: 2.0, 8: 2.0})
+    e = A.autotune_key(key, candidates=cands, cache=A.TuningCache(),
+                       runner_factory=factory, timer=timer)
+    assert e["row_tile"] == 4
+
+
+def test_monkeypatched_default_timer_is_honoured(monkeypatch):
+    """measure() consults the module-level default timer, so a test can
+    freeze time globally."""
+    ticks = iter(range(100))
+    monkeypatch.setattr(A, "_default_timer", lambda: float(next(ticks)))
+    dt = A.measure(lambda: None, iters=3, warmup=0)
+    assert dt == 1.0      # consecutive integer ticks => 1s per call
+
+
+def test_winner_never_slower_than_heuristic_candidate():
+    """The heuristic's tile is always in the timed candidate set, so the
+    measured winner's cost is <= the heuristic tile's cost."""
+    key = _key()
+    cands = A.enumerate_candidates(key)
+    heur = A.heuristic_row_tile(key)
+    assert heur in [c.row_tile for c in cands]
+    costs = {c.row_tile: float(i + 1) for i, c in enumerate(cands)}
+    factory, timer = _scripted(costs)
+    e = A.autotune_key(key, candidates=cands, cache=A.TuningCache(),
+                       runner_factory=factory, timer=timer)
+    assert costs[e["row_tile"]] <= costs[heur]
+
+
+def test_warm_measures_real_kernel(tmp_path):
+    """End-to-end: one tiny spec through the real jitted interpret-mode
+    kernel lands a valid measured entry in the cache."""
+    cache = A.TuningCache()
+    A.warm([(8, 8, 2, "fwd", "pallas", "float32", True)], cache=cache,
+           iters=1, verbose=False)
+    assert len(cache) == 1
+    (entry,) = cache.entries.values()
+    assert entry["source"] == "measured"
+    assert 8 % entry["row_tile"] == 0
+    path = cache.save(tmp_path / "warm.json")
+    assert A.TuningCache.load(path).entries == cache.entries
+
+
+# ---------------------------------------------------------------------------
+# Candidate admission: the VMEM budget is a hard wall.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("budget", [1 << 14, 1 << 16, 1 << 18])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_candidates_never_exceed_vmem_budget(budget, dtype):
+    key = _key(h=4096, w=128, dtype=dtype)
+    cands = A.enumerate_candidates(key, vmem_budget=budget)
+    assert cands, (budget, dtype)
+    for c in cands:
+        # the minimal (single-buffered) footprint must fit — admission
+        # may drop prefetch headroom, never the resident working set
+        assert A.Candidate(c.row_tile, double_buffer=False) \
+            .working_set(key) <= budget
+
+
+def test_candidate_admission_grows_with_budget():
+    key = _key(h=4096, w=128)
+    small = max(c.row_tile
+                for c in A.enumerate_candidates(key, vmem_budget=1 << 16))
+    big = max(c.row_tile
+              for c in A.enumerate_candidates(key, vmem_budget=1 << 20))
+    assert big > small
+
+
+def test_candidate_bf16_carry_byte_accounting():
+    """Regression pin of the PR-4 accounting at the candidate level: the
+    streamed term scales with the stream dtype, the carry term with the
+    carry dtype — and the adjoint directions carry three f32 rows."""
+    w, t, n = 128, 64, 6
+    k_f32 = _key(w=w)
+    k_bf16 = _key(w=w, dtype="bfloat16")
+    k_bf16_carry = _key(w=w, dtype="bfloat16", carry_dtype="bfloat16")
+    assert A.Candidate(t).working_set(k_f32) == n * t * w * 4 * 2 + w * 4
+    assert A.Candidate(t).working_set(k_bf16) == n * t * w * 2 * 2 + w * 4
+    assert A.Candidate(t).working_set(k_bf16_carry) \
+        == n * t * w * 2 * 2 + w * 2
+    # adjoint kernels: 5 streams, 3 carry rows, carry always f32
+    k_bwd = _key(w=w, direction="bwd", dtype="bfloat16")
+    assert k_bwd.carry_bytes == 3 * 4
+    assert A.Candidate(t).working_set(k_bwd) \
+        == 5 * t * w * 2 * 2 + w * 12
+    # at a tight budget (and a scan long enough not to cap on divisors),
+    # bf16 streams admit strictly larger tiles
+    budget = 1 << 18
+    max16 = max(c.row_tile for c in A.enumerate_candidates(
+        _key(h=4096, w=w, dtype="bfloat16"), vmem_budget=budget))
+    max32 = max(c.row_tile for c in A.enumerate_candidates(
+        _key(h=4096, w=w), vmem_budget=budget))
+    assert max16 > max32
+
+
+def test_scan_key_rejects_unknown_direction():
+    with pytest.raises(ValueError):
+        _key(direction="sideways")
+
+
+# ---------------------------------------------------------------------------
+# Precision-policy routing (the fix for dtype_bytes=4-regardless-of-policy
+# call sites) — parametrized over every named preset.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(PRECISIONS))
+def test_pick_row_tile_routes_through_policy(name):
+    p = resolve_precision(name)
+    sb, cb = tuning.policy_itemsizes(name)
+    assert sb == jnp.dtype(p.compute_dtype).itemsize
+    assert cb == jnp.dtype(p.carry_dtype).itemsize
+    tc = tuning.pick_row_tile_for_policy(4096, 128, name,
+                                         vmem_budget=1 << 21)
+    want = tuning.pick_row_tile(4096, 128, sb, vmem_budget=1 << 21,
+                                carry_dtype_bytes=cb)
+    assert tc == want
+
+
+def test_policy_presets_pin_expected_itemsizes():
+    assert tuning.policy_itemsizes("f32") == (4, 4)
+    assert tuning.policy_itemsizes("bf16") == (2, 4)      # f32 carries
+    assert tuning.policy_itemsizes("bf16_f32params") == (2, 4)
+    # bf16 streams unlock a >= tile vs f32 at any fixed budget
+    t16 = tuning.pick_row_tile_for_policy(4096, 128, "bf16",
+                                          vmem_budget=1 << 21).row_tile
+    t32 = tuning.pick_row_tile_for_policy(4096, 128, "f32",
+                                          vmem_budget=1 << 21).row_tile
+    assert t16 >= 2 * t32

@@ -1,0 +1,155 @@
+"""Benchmark regression gate tests (DESIGN.md §11): the gate must flag a
+synthetically injected 2x slowdown under the default tolerance, pass
+identical numbers, warn (not fail) on missing baseline entries, and the
+``benchmarks.run --json`` payload must round-trip through the gate's
+loader."""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:          # benchmarks/ is a namespace package
+    sys.path.insert(0, str(ROOT))
+
+from benchmarks import gate  # noqa: E402
+from benchmarks import run as bench_run  # noqa: E402
+
+pytestmark = pytest.mark.bench
+
+
+def _payload(rows):
+    return {"schema": 1, "smoke": True, "only": [], "failed": [],
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows]}
+
+
+BASE = _payload([
+    ("scan/fwd/128", 5000.0, "row_tile=64"),
+    ("scan/bwd/128", 9000.0, ""),
+    ("scan/tiny", 10.0, ""),          # below the noise floor
+])
+
+
+def test_identical_numbers_pass():
+    res = gate.compare(BASE, BASE)
+    assert res.ok
+    assert not res.regressions and not res.warnings
+    assert res.checked == 2           # the tiny rung is floored out
+
+
+def test_injected_2x_slowdown_fails():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][0]["us_per_call"] *= 2.0
+    res = gate.compare(BASE, cur)     # default tolerance 1.8
+    assert not res.ok
+    (name, b, c, ratio), = res.regressions
+    assert name == "scan/fwd/128"
+    assert ratio == pytest.approx(2.0)
+
+
+def test_improvement_is_not_a_failure():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][1]["us_per_call"] /= 3.0
+    res = gate.compare(BASE, cur)
+    assert res.ok
+    assert [r[0] for r in res.improvements] == ["scan/bwd/128"]
+
+
+def test_noise_floor_suppresses_tiny_rungs():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][2]["us_per_call"] *= 2.0       # 10us -> 20us: pure noise
+    assert gate.compare(BASE, cur).ok
+    # but a tiny rung exploding past the floor IS a regression
+    cur["rows"][2]["us_per_call"] = 5000.0
+    assert not gate.compare(BASE, cur).ok
+
+
+def test_missing_entries_warn_not_fail():
+    cur = _payload([
+        ("scan/fwd/128", 5000.0, ""),          # bwd rung retired ...
+        ("scan/new_rung", 7000.0, ""),         # ... new rung landed
+    ])
+    res = gate.compare(BASE, cur)
+    assert res.ok
+    assert len(res.warnings) == 3              # bwd + tiny missing, new
+    assert any("no baseline entry" in w for w in res.warnings)
+    assert any("missing from current" in w for w in res.warnings)
+
+
+def test_tolerance_band_is_configurable():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][0]["us_per_call"] *= 1.5
+    assert gate.compare(BASE, cur).ok                       # 1.5 < 1.8
+    assert not gate.compare(BASE, cur, tolerance=1.4).ok    # 1.5 > 1.4
+
+
+# ---------------------------------------------------------------------------
+# CLI behaviour (what CI actually invokes).
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_cli_exit_codes_and_update(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", BASE)
+    same = _write(tmp_path, "same.json", BASE)
+    assert gate.main(["--baseline", base, "--current", same]) == 0
+
+    slow = json.loads(json.dumps(BASE))
+    slow["rows"][0]["us_per_call"] *= 2.0
+    cur = _write(tmp_path, "slow.json", slow)
+    assert gate.main(["--baseline", base, "--current", cur]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+    # --update re-baselines instead of gating, then the same run passes
+    assert gate.main(["--baseline", base, "--current", cur,
+                      "--update"]) == 0
+    assert gate.main(["--baseline", base, "--current", cur]) == 0
+
+
+# ---------------------------------------------------------------------------
+# run.py --json schema round-trip.
+# ---------------------------------------------------------------------------
+
+def test_json_payload_roundtrips_through_gate_loader(tmp_path):
+    rows = ["scan/fwd,123.4,row_tile=64;ws=1.0",
+            "scan/bwd,456.7,",
+            "serve/load,89.1,ttft=1,qd=2"]     # derived may contain commas
+    payload = bench_run.build_payload(rows, smoke=True, only={"fig3"},
+                                      failed=["table1"])
+    assert payload["schema"] == bench_run.JSON_SCHEMA == 1
+    assert payload["only"] == ["fig3"]
+    assert payload["failed"] == ["table1"]
+
+    path = tmp_path / "report.json"
+    path.write_text(json.dumps(payload))
+    loaded = gate.load_report(path)
+    assert loaded == json.loads(json.dumps(payload))
+    assert gate.index_rows(loaded) == {"scan/fwd": 123.4, "scan/bwd": 456.7,
+                                       "serve/load": 89.1}
+    # derived survives intact (split on the first two commas only)
+    assert loaded["rows"][2]["derived"] == "ttft=1,qd=2"
+
+
+def test_gate_loader_rejects_malformed_reports(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"rows": [{"name": "x"}]}))    # no us_per_call
+    with pytest.raises(ValueError):
+        gate.load_report(p)
+    p.write_text(json.dumps({"schema": 99, "rows": []}))
+    with pytest.raises(ValueError):
+        gate.load_report(p)
+    p.write_text(json.dumps([1, 2, 3]))
+    with pytest.raises(ValueError):
+        gate.load_report(p)
+
+
+def test_duplicate_rung_names_keep_last():
+    payload = _payload([("scan/fwd", 1.0, ""), ("scan/fwd", 2.0, "")])
+    assert gate.index_rows(payload) == {"scan/fwd": 2.0}

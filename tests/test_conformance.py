@@ -1,0 +1,208 @@
+"""Randomized oracle-conformance grid (DESIGN.md §11).
+
+~40 seeded samples over (H, W, C, dtype, direction, channel_shared, impl)
+must match the pure-jnp oracle (``kernels/ref.py``) in forward AND grad
+within per-dtype tolerances.  A second sweep runs every row tile the
+autotuner's candidate enumerator can emit for the sampled shapes —
+tuned cache entries are drawn from the same enumerator, so a green grid
+proves any cache entry is numerically safe before it ever reaches a
+launch site.
+"""
+
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gspn as G
+from repro.kernels import autotune
+from repro.kernels import ref as R
+from repro.kernels.ops import gspn_scan_pair
+
+pytestmark = pytest.mark.kernels
+
+HS = [4, 8, 12, 16, 24, 32]
+WS = [4, 8, 16, 24, 32]
+CS = [1, 2, 4, 6]
+DTYPES = ["float32", "bfloat16"]
+SINGLE_DIRS = ["tb", "bt", "lr", "rl"]
+N_CONFIGS = 40
+
+# Per-dtype (rtol, atol): the kernels accumulate in f32 whatever the
+# stream dtype, so bf16 error is bounded by operand quantisation plus one
+# output rounding per row (taps are row-stochastic => non-expansive).
+TOL = {
+    "float32": {"fwd": (1e-5, 1e-5), "grad": (1e-4, 1e-5)},
+    "bfloat16": {"fwd": (7.5e-2, 7.5e-2), "grad": (1.5e-1, 1.5e-1)},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Conf:
+    h: int
+    w: int
+    c: int
+    dtype: str
+    direction: str            # tb | bt | lr | rl | pair (vertical pair)
+    channel_shared: bool
+    impl: str                 # pallas | multidir | xla
+
+    def id(self) -> str:
+        return (f"h{self.h}w{self.w}c{self.c}-{self.direction}-"
+                f"{self.impl}-{self.dtype}-cs{int(self.channel_shared)}")
+
+
+def _sample_configs(n: int = N_CONFIGS, seed: int = 0) -> list:
+    rng = random.Random(seed)
+    cfgs, seen = [], set()
+    while len(cfgs) < n:
+        direction = rng.choice(SINGLE_DIRS + ["pair", "pair"])
+        impl = rng.choice(["multidir", "xla"] if direction == "pair"
+                          else ["pallas", "pallas", "xla"])
+        cfg = Conf(rng.choice(HS), rng.choice(WS), rng.choice(CS),
+                   rng.choice(DTYPES), direction,
+                   rng.choice([True, False]), impl)
+        if cfg not in seen:
+            seen.add(cfg)
+            cfgs.append(cfg)
+    return cfgs
+
+
+CONFIGS = _sample_configs()
+
+
+def _operands(cfg: Conf, seed: int, n_dirs: int = 1):
+    """x/lam (C, H, W), softmaxed taps (n_dirs*, Gw, H, W), dy cotangent."""
+    gw = 1 if cfg.channel_shared else cfg.c
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (cfg.c, cfg.h, cfg.w)).astype(dt)
+    lam = jax.nn.sigmoid(
+        jax.random.normal(ks[1], (cfg.c, cfg.h, cfg.w))).astype(dt)
+    shape = (n_dirs, gw, cfg.h, cfg.w, 3) if n_dirs > 1 \
+        else (gw, cfg.h, cfg.w, 3)
+    taps = jax.nn.softmax(jax.random.normal(ks[2], shape), axis=-1)
+    wl, wc, wr = (taps[..., i].astype(dt) for i in range(3))
+    dy = jax.random.normal(ks[3], (cfg.c, cfg.h, cfg.w))
+    return x, wl, wc, wr, lam, dy
+
+
+def _oracle_single(x, wl, wc, wr, lam, direction):
+    """ref.py scan in f32 on the oriented operands, un-oriented back."""
+    can = lambda a: G._to_canonical(a.astype(jnp.float32), direction)
+    h = R.gspn_scan_ref(can(x), can(wl), can(wc), can(wr), can(lam))
+    return G._from_canonical(h, direction)
+
+
+def _oracle_pair(x, wl2, wc2, wr2, lam2):
+    f32 = lambda a: a.astype(jnp.float32)
+    fwd = R.gspn_scan_ref(f32(x), f32(wl2[0]), f32(wc2[0]), f32(wr2[0]),
+                          f32(lam2[0]))
+    rev = R.gspn_scan_ref(f32(x), f32(wl2[1]), f32(wc2[1]), f32(wr2[1]),
+                          f32(lam2[1]), reverse=True)
+    return jnp.stack([fwd, rev])
+
+
+def _check(a, b, which, dtype):
+    rtol, atol = TOL[dtype][which]
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=rtol, atol=atol, err_msg=which)
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=lambda c: c.id())
+def test_oracle_conformance_fwd_and_grad(cfg):
+    seed = CONFIGS.index(cfg)
+    if cfg.direction == "pair":
+        x, wl2, wc2, wr2, lam_s, dy = _operands(cfg, seed, n_dirs=2)
+        lam2 = jnp.stack([lam_s, lam_s])
+        dy2 = jnp.stack([dy, -dy])
+
+        def impl_fn(x, wl2, wc2, wr2, lam2):
+            return gspn_scan_pair(x, wl2, wc2, wr2, lam2, impl=cfg.impl)
+
+        _check(impl_fn(x, wl2, wc2, wr2, lam2),
+               _oracle_pair(x, wl2, wc2, wr2, lam2), "fwd", cfg.dtype)
+
+        def loss_impl(*a):
+            return jnp.sum(impl_fn(*a).astype(jnp.float32) * dy2)
+
+        def loss_ref(*a):
+            return jnp.sum(_oracle_pair(*a) * dy2)
+
+        args = (x, wl2, wc2, wr2, lam2)
+    else:
+        x, wl, wc, wr, lam, dy = _operands(cfg, seed)
+
+        def impl_fn(x, wl, wc, wr, lam):
+            return G.directional_scan(x, wl, wc, wr, lam, cfg.direction,
+                                      impl=cfg.impl)
+
+        _check(impl_fn(x, wl, wc, wr, lam),
+               _oracle_single(x, wl, wc, wr, lam, cfg.direction),
+               "fwd", cfg.dtype)
+
+        def loss_impl(*a):
+            return jnp.sum(impl_fn(*a).astype(jnp.float32) * dy)
+
+        def loss_ref(*a):
+            return jnp.sum(_oracle_single(*a, cfg.direction) * dy)
+
+        args = (x, wl, wc, wr, lam)
+
+    g_impl = jax.grad(loss_impl, argnums=tuple(range(5)))(*args)
+    g_ref = jax.grad(loss_ref, argnums=tuple(range(5)))(*args)
+    for gi, gr in zip(g_impl, g_ref):
+        _check(gi, gr, "grad", cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Every config the tuner can emit: the cache only ever stores row tiles
+# from enumerate_candidates, so sweeping the enumerator's output over the
+# sampled shapes proves any cache entry is safe (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+TUNER_CFGS = [c for c in CONFIGS if c.impl in ("pallas", "multidir")][:12]
+
+
+def _scan_geometry(cfg: Conf):
+    """(scan_len, lane_w): horizontal directions scan over W."""
+    if cfg.direction in ("lr", "rl"):
+        return cfg.w, cfg.h
+    return cfg.h, cfg.w
+
+
+@pytest.mark.parametrize("cfg", TUNER_CFGS, ids=lambda c: c.id())
+def test_every_tuner_candidate_matches_oracle(cfg):
+    seed = 1000 + TUNER_CFGS.index(cfg)
+    scan_len, lane_w = _scan_geometry(cfg)
+    direction = "pair_fwd" if cfg.direction == "pair" else "fwd"
+    key = autotune.ScanKey(
+        autotune.device_kind(True), scan_len, lane_w, cfg.c, direction,
+        cfg.impl, cfg.dtype, "float32", cfg.channel_shared)
+    cands = autotune.enumerate_candidates(key)
+    assert cands, key
+    tiles = sorted({c.row_tile for c in cands})
+    # The heuristic's choice is always in the candidate set — a measured
+    # winner can therefore never be slower than the heuristic beyond
+    # timing noise (the tuner times the heuristic tile too).
+    assert autotune.heuristic_row_tile(key) in tiles
+
+    if cfg.direction == "pair":
+        x, wl2, wc2, wr2, lam_s, _ = _operands(cfg, seed, n_dirs=2)
+        lam2 = jnp.stack([lam_s, lam_s])
+        want = _oracle_pair(x, wl2, wc2, wr2, lam2)
+        for t in tiles:
+            got = gspn_scan_pair(x, wl2, wc2, wr2, lam2, impl=cfg.impl,
+                                 row_tile=t)
+            _check(got, want, "fwd", cfg.dtype)
+    else:
+        x, wl, wc, wr, lam, _ = _operands(cfg, seed)
+        want = _oracle_single(x, wl, wc, wr, lam, cfg.direction)
+        for t in tiles:
+            got = G.directional_scan(x, wl, wc, wr, lam, cfg.direction,
+                                     impl=cfg.impl, row_tile=t)
+            _check(got, want, "fwd", cfg.dtype)
