@@ -23,10 +23,16 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(line, flush=True)
 
 
-def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
-    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1,
+            min_iters: int = 1) -> float:
+    """Median wall time (seconds) of fn(*args) with block_until_ready.
+
+    ``min_iters`` floors the iteration count under --smoke: rungs whose
+    RELATIVE timing is gated (the dtype-ordering check, DESIGN.md §12)
+    ask for a few iterations even in smoke mode so a single scheduler
+    hiccup cannot flip the comparison."""
     if SMOKE:
-        iters, warmup = 1, min(warmup, 1)
+        iters, warmup = max(1, min_iters), min(warmup, 1)
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []

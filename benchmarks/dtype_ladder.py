@@ -6,7 +6,10 @@ Three things are measured per (dtype, impl, resolution) rung:
 * wall time of the fused forward scan (``us_per_call``) and, per dtype,
   of one fwd+bwd step through the custom-vjp entry point — on TPU the
   bf16 rungs stream half the HBM bytes and the tuner doubles the row
-  tile (on CPU/interpret the timing is structural, like fig3);
+  tile (on CPU/interpret the timing is structural, like fig3); each
+  pallas rung also reports the resolved ``(row_tile, pipeline_depth)``
+  plan, and the gate's ordering check (``gate.py``) enforces that bf16
+  pallas fwd strictly beats f32 at every resolution (DESIGN.md §12);
 * the bf16 rel-L2 error against the f32 oracle for the same inputs —
   the number the §10 error-budget table pins (≤ 1e-2);
 * the analytic streamed bytes (benchmarks.common.scan_bytes) so the
@@ -67,7 +70,11 @@ def run():
             inputs = tuple(a.astype(dtype) for a in inputs32)
             for impl in IMPLS:
                 fwd = jax.jit(lambda *a, impl=impl: gspn_scan(*a, impl=impl))
-                t_f = time_fn(fwd, *inputs)
+                # The pallas fwd rungs feed the gate's STRICT bf16<f32
+                # ordering check — keep a median-of-5 even under --smoke
+                # so one scheduler hiccup cannot flip the comparison.
+                t_f = time_fn(fwd, *inputs, iters=5,
+                              min_iters=5 if impl == "pallas" else 1)
                 out = np.asarray(fwd(*inputs), np.float32)
                 if dname == "f32" and impl == "xla":
                     ref = out
@@ -82,16 +89,18 @@ def run():
                 # operands (not hand-written) so they track the launch's
                 # own resolution inside gspn_scan_fwd_pallas.
                 x_in, wl_in = inputs[0], inputs[1]
-                tile = autotune.row_tile_for(
+                plan = autotune.plan_for(
                     h, w, c=x_in.shape[0], direction="fwd", impl="pallas",
                     dtype=dtype,
                     channel_shared=x_in.shape[0] != wl_in.shape[0],
                     interpret=True)
                 heur = pick_row_tile_for_policy(
-                    h, w, dname, cap=autotune.DEFAULT_CAP).row_tile
+                    h, w, dname, cap=autotune.DEFAULT_CAP,
+                    pipeline_depth=plan.pipeline_depth).row_tile
                 mb = scan_bytes(B, CP, h, w, dtype_bytes=nbytes) / 2 ** 20
                 emit(f"dtype/{dname}/{impl}/{h}x{w}/fwd", t_f * 1e6,
-                     f"rel_err={err:.2e};row_tile={tile};heur={heur};"
+                     f"rel_err={err:.2e};row_tile={plan.row_tile};"
+                     f"pipeline_depth={plan.pipeline_depth};heur={heur};"
                      f"stream_mb={mb:.1f}")
             step = jax.jit(lambda *a: _step(*a, impl="xla"))
             t_s = time_fn(step, *inputs)

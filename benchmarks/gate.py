@@ -16,6 +16,15 @@ Rungs missing from either side are WARNINGS, never failures: a new
 benchmark must be able to land before its baseline exists, and a renamed
 or retired rung must not wedge CI — re-baseline to start gating it.
 
+On top of the ratio band the gate enforces one ABSOLUTE ordering inside
+the current report (DESIGN.md §12): at every dtype-ladder resolution the
+bf16 pallas forward rung must be strictly faster than the f32 one
+(``dtype/bf16/pallas/{res}/fwd``  <  ``dtype/f32/pallas/{res}/fwd``).
+A violation fails the gate — and also blocks ``--update``, so a report
+with the bf16 cliff re-opened can never become the baseline.  Because
+the check is a within-report comparison, uniformly scaling all timings
+(slower runner, injected-slowdown self-test) cannot trip it.
+
 Re-baselining (after an intentional perf change or a runner swap)::
 
     PYTHONPATH=src python -m benchmarks.run --smoke --only multidir,dtype \
@@ -72,6 +81,30 @@ def index_rows(payload: dict) -> dict:
     return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
 
 
+def dtype_ordering_violations(payload: dict) -> list:
+    """Within-report check: bf16 pallas fwd must STRICTLY beat f32 at
+    every dtype-ladder resolution (the pipeline_depth payoff, DESIGN.md
+    §12).  Returns human-readable violation strings naming the offending
+    rung and dtype; resolutions where either side is absent are skipped
+    (the ratio gate's missing-rung warnings already cover those)."""
+    rows = index_rows(payload)
+    prefix_f32, prefix_bf16 = "dtype/f32/pallas/", "dtype/bf16/pallas/"
+    violations = []
+    for name in sorted(rows):
+        if not (name.startswith(prefix_f32) and name.endswith("/fwd")):
+            continue
+        res = name[len(prefix_f32):-len("/fwd")]
+        peer = f"{prefix_bf16}{res}/fwd"
+        if peer not in rows:
+            continue
+        f32_us, bf16_us = rows[name], rows[peer]
+        if bf16_us >= f32_us:
+            violations.append(
+                f"dtype ordering violated at rung {res}: bf16 pallas fwd "
+                f"{bf16_us:.1f}us >= f32 {f32_us:.1f}us")
+    return violations
+
+
 def compare(baseline: dict, current: dict, *,
             tolerance: float = DEFAULT_TOLERANCE,
             min_us: float = DEFAULT_MIN_US) -> GateResult:
@@ -112,7 +145,16 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     current = load_report(args.current)
+    ordering = dtype_ordering_violations(current)
+    for v in ordering:
+        print(f"[gate] ORDERING: {v}")
+
     if args.update:
+        if ordering:
+            print(f"[gate] FAIL: refusing to re-baseline — "
+                  f"{len(ordering)} dtype ordering violations in "
+                  f"{args.current}")
+            return 1
         pathlib.Path(args.baseline).write_text(
             json.dumps(current, indent=1) + "\n")
         print(f"[gate] re-baselined {args.baseline} from {args.current} "
@@ -130,13 +172,15 @@ def main(argv=None) -> int:
     for name, b, c, r in res.regressions:
         print(f"[gate] REGRESSION: {name}  {b:.1f}us -> {c:.1f}us "
               f"({r:.2f}x > {args.tolerance:.2f}x)")
-    verdict = "FAIL" if res.regressions else "ok"
+    failed = bool(res.regressions) or bool(ordering)
+    verdict = "FAIL" if failed else "ok"
     print(f"[gate] {verdict}: {res.checked} rungs compared, "
           f"{len(res.regressions)} regressions, "
           f"{len(res.improvements)} improvements, "
+          f"{len(ordering)} ordering violations, "
           f"{len(res.warnings)} warnings "
           f"(tolerance {args.tolerance:.2f}x, floor {args.min_us:.0f}us)")
-    return 1 if res.regressions else 0
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -50,7 +50,11 @@ from repro.kernels import tuning
 
 ENV_CACHE_PATH = "GSPN_TUNE_CACHE"
 SEED_CACHE_PATH = pathlib.Path(__file__).with_name("tune_cache_seed.json")
-SCHEMA_VERSION = 1
+# Schema 2 (PR 6): entries gained a "pipeline_depth" field (1 = the
+# revolving-buffer BlockSpec stream, 2 = the explicitly staged pipeline —
+# DESIGN.md §12).  Schema-1 files load unchanged: a missing field reads
+# as depth 1, reproducing the pre-PR6 kernels exactly.
+SCHEMA_VERSION = 2
 
 # Heuristic-fallback tile cap — matches gspn_scan.DEFAULT_ROW_TILE so a
 # cache miss reproduces the pre-tuner behaviour bit-for-bit.  Measured
@@ -64,6 +68,15 @@ ENUM_CAP = 512
 DIRECTIONS = ("fwd", "bwd", "pair_fwd", "pair_bwd", "quad")
 _N_STREAMS = {"fwd": 6, "bwd": 5, "pair_fwd": 6, "pair_bwd": 5, "quad": 6}
 _CARRY_ROWS = {"fwd": 1, "bwd": 3, "pair_fwd": 1, "pair_bwd": 3, "quad": 1}
+
+# Pipeline depths the kernels implement (DESIGN.md §12).  Depth 2 (the
+# explicitly staged pipeline) is only ever ENUMERATED for narrow streams
+# (< 4 bytes): the stage exists to amortise the narrow-dtype widen-on-load
+# and sublane retiling over a whole tile, and for f32 streams it is a dead
+# VMEM copy that doubles residency for nothing.  The kernels themselves
+# accept depth 2 at any dtype (the conformance grid proves both depths
+# bit-identical) — the restriction is admission policy, not capability.
+PIPELINE_DEPTHS = (1, 2)
 
 # Injectable timer — tests monkeypatch this (or pass ``timer=``) to make
 # the measurement harness deterministic.
@@ -118,20 +131,48 @@ class ScanKey:
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One tunable layout.  ``row_tile`` is the knob that reaches the
+    """One tunable layout.  ``row_tile`` is the tile knob that reaches the
     kernel (rows per sequential grid step — the grid split is ``h //
     row_tile``); ``double_buffer`` is the admission layout: True reserves
     prefetch headroom for pipelining (the safe default), False admits
     larger tiles that fit only single-buffered (the aggressive layout the
-    measurement decides on)."""
+    measurement decides on).  ``pipeline_depth`` selects the kernel
+    structure itself: 1 = the revolving-buffer BlockSpec stream (the
+    pre-PR6 kernels, bit-for-bit), 2 = the explicitly staged pipeline
+    (DESIGN.md §12: bulk widen-on-load input stages + f32 out-stage with
+    one downcast writeback per tile)."""
     row_tile: int
     double_buffer: bool = True
+    pipeline_depth: int = 1
 
     def working_set(self, key: ScanKey) -> int:
         return tuning.scan_working_set(
             self.row_tile, key.w, key.stream_bytes, key.n_streams,
             double_buffer=self.double_buffer,
-            carry_dtype_bytes=key.carry_bytes)
+            carry_dtype_bytes=key.carry_bytes,
+            pipeline_depth=self.pipeline_depth)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanPlan:
+    """What a launch site needs from the tuner: the tile AND the pipeline
+    structure (``row_tile_for`` survives as the tile-only view)."""
+    row_tile: int
+    pipeline_depth: int = 1
+
+
+def depth_admissible(key: ScanKey, pipeline_depth: int) -> bool:
+    """Admission policy for the staged pipeline: depth 2 only pays for
+    narrow (< 4-byte) streams — see PIPELINE_DEPTHS."""
+    if pipeline_depth == 1:
+        return True
+    return pipeline_depth == 2 and key.stream_bytes < 4
+
+
+def heuristic_pipeline_depth(key: ScanKey) -> int:
+    """Static-fallback depth: the staged pipeline for narrow streams
+    (bf16/fp8), the classic stream for full-width f32."""
+    return 2 if key.stream_bytes < 4 else 1
 
 
 def enumerate_candidates(key: ScanKey, *,
@@ -140,28 +181,41 @@ def enumerate_candidates(key: ScanKey, *,
     """All configs the tuner may time (and therefore emit) for ``key``:
     power-of-two divisors of the scan length whose working set fits the
     VMEM budget — double-buffered where possible, single-buffered as the
-    aggressive extension.  Deduplicated on ``row_tile`` (the knob that
-    reaches the kernel), keeping the double-buffered admission label."""
+    aggressive extension — at every admissible pipeline depth (depth 2
+    only for narrow streams).  Deduplicated on ``(row_tile,
+    pipeline_depth)`` (the knobs that reach the kernel), keeping the
+    double-buffered admission label."""
     out: list[Candidate] = []
-    seen: set[int] = set()
+    seen: set[tuple[int, int]] = set()
     t = 1
     while t <= cap and key.h % t == 0:
-        for db in (True, False):
-            cand = Candidate(row_tile=t, double_buffer=db)
-            if t not in seen and cand.working_set(key) <= vmem_budget:
-                seen.add(t)
-                out.append(cand)
+        for depth in PIPELINE_DEPTHS:
+            if not depth_admissible(key, depth):
+                continue
+            for db in (True, False):
+                cand = Candidate(row_tile=t, double_buffer=db,
+                                 pipeline_depth=depth)
+                if (t, depth) not in seen \
+                        and cand.working_set(key) <= vmem_budget:
+                    seen.add((t, depth))
+                    out.append(cand)
         t *= 2
     return out
 
 
 def heuristic_row_tile(key: ScanKey, *, cap: int = DEFAULT_CAP,
-                       vmem_budget: int = tuning.VMEM_BYTES) -> int:
+                       vmem_budget: int = tuning.VMEM_BYTES,
+                       pipeline_depth: int | None = None) -> int:
     """The static-VMEM-model fallback — identical accounting to the
-    pre-tuner call sites (cache miss ⇒ unchanged behaviour)."""
+    pre-tuner call sites (cache miss ⇒ unchanged behaviour).  The depth
+    defaults to the heuristic depth for the key's stream dtype so the
+    fallback tile is admissible for the kernel structure it will run."""
+    depth = (heuristic_pipeline_depth(key) if pipeline_depth is None
+             else pipeline_depth)
     return tuning.pick_row_tile(
         key.h, key.w, key.stream_bytes, vmem_budget=vmem_budget, cap=cap,
-        n_streams=key.n_streams, carry_dtype_bytes=key.carry_bytes).row_tile
+        n_streams=key.n_streams, carry_dtype_bytes=key.carry_bytes,
+        pipeline_depth=depth).row_tile
 
 
 # ---------------------------------------------------------------------------
@@ -246,27 +300,46 @@ def load_cache(path) -> int:
     return len(extra)
 
 
+def _entry_depth(entry: dict) -> int:
+    """Pipeline depth recorded in a cache entry; schema-1 entries (no
+    field) read as depth 1 — the pre-PR6 kernel structure."""
+    try:
+        return int(entry.get("pipeline_depth", 1))
+    except (TypeError, ValueError):
+        return -1
+
+
 def _entry_valid(key: ScanKey, entry: dict, *,
                  vmem_budget: int = tuning.VMEM_BYTES) -> bool:
     """A cache entry is honoured only if it is still safe for the shape:
-    a power-of-two row tile dividing H whose minimal (single-buffered)
-    working set fits the budget.  Anything else falls back silently."""
+    a power-of-two row tile dividing H, a known pipeline depth, and a
+    minimal (single-buffered) working set at that depth fitting the
+    budget.  Anything else falls back silently."""
     try:
         t = int(entry["row_tile"])
     except (KeyError, TypeError, ValueError):
         return False
     if t < 1 or (t & (t - 1)) or key.h % t:
         return False
-    return Candidate(t, double_buffer=False).working_set(key) <= vmem_budget
+    depth = _entry_depth(entry)
+    if depth not in PIPELINE_DEPTHS:
+        return False
+    return Candidate(t, double_buffer=False,
+                     pipeline_depth=depth).working_set(key) <= vmem_budget
 
 
-def row_tile_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
-                 impl: str = "pallas", dtype="float32",
-                 carry_dtype="float32", channel_shared: bool = False,
-                 interpret: bool = False, cache: TuningCache | None = None,
-                 cap: int = DEFAULT_CAP) -> int:
-    """THE launch-site entry point: tuned row tile if the cache knows this
-    (device, shape, direction, dtype-policy) key, heuristic otherwise.
+def plan_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
+             impl: str = "pallas", dtype="float32",
+             carry_dtype="float32", channel_shared: bool = False,
+             interpret: bool = False, cache: TuningCache | None = None,
+             cap: int = DEFAULT_CAP, row_tile: int | None = None,
+             pipeline_depth: int | None = None) -> ScanPlan:
+    """THE launch-site entry point: tuned ``(row_tile, pipeline_depth)``
+    if the cache knows this (device, shape, direction, dtype-policy) key,
+    heuristic otherwise.  Explicit ``row_tile`` / ``pipeline_depth``
+    arguments always win; an explicit tile bypasses the cache entirely
+    (a measured entry's depth belongs to the tile it was measured with)
+    and takes the heuristic depth unless one is given.
 
     Every fused-scan launch (fwd, bwd, pair, quad — and through them the
     chunked-prefill and sp block-local paths) funnels here, so one cache
@@ -274,11 +347,32 @@ def row_tile_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
     key = ScanKey(device_kind(interpret), h, w, c, direction, impl,
                   str(jnp.dtype(dtype)), str(jnp.dtype(carry_dtype)),
                   bool(channel_shared))
+    if row_tile is not None:
+        depth = (heuristic_pipeline_depth(key) if pipeline_depth is None
+                 else pipeline_depth)
+        return ScanPlan(row_tile, depth)
     cache = cache if cache is not None else get_cache()
     entry = cache.lookup(key)
     if entry is not None and _entry_valid(key, entry):
-        return int(entry["row_tile"])
-    return heuristic_row_tile(key, cap=cap)
+        t, depth = int(entry["row_tile"]), _entry_depth(entry)
+    else:
+        depth = heuristic_pipeline_depth(key)
+        t = heuristic_row_tile(key, cap=cap, pipeline_depth=depth)
+    if pipeline_depth is not None:
+        depth = pipeline_depth
+    return ScanPlan(t, depth)
+
+
+def row_tile_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
+                 impl: str = "pallas", dtype="float32",
+                 carry_dtype="float32", channel_shared: bool = False,
+                 interpret: bool = False, cache: TuningCache | None = None,
+                 cap: int = DEFAULT_CAP) -> int:
+    """Tile-only view of :func:`plan_for` (kept for callers that manage
+    the pipeline structure themselves)."""
+    return plan_for(h, w, c=c, direction=direction, impl=impl, dtype=dtype,
+                    carry_dtype=carry_dtype, channel_shared=channel_shared,
+                    interpret=interpret, cache=cache, cap=cap).row_tile
 
 
 # ---------------------------------------------------------------------------
@@ -332,36 +426,39 @@ def default_runner_factory(key: ScanKey, *, interpret: bool = True,
     carry = jnp.dtype(key.carry_dtype)
 
     def factory(cand: Candidate):
-        t = cand.row_tile
+        t, depth = cand.row_tile, cand.pipeline_depth
         if key.direction == "fwd":
             run = jax.jit(lambda *a: _pk.gspn_scan_fwd_pallas(
                 *a, channels_per_weight=cpw, row_tile=t,
-                interpret=interpret, carry_dtype=carry))
+                interpret=interpret, carry_dtype=carry,
+                pipeline_depth=depth))
             args = (x, wl, wc, wr, lam)
         elif key.direction == "bwd":
             run = jax.jit(lambda *a: _pk.gspn_scan_bwd_pallas(
                 *a, channels_per_weight=cpw, row_tile=t,
-                interpret=interpret))
+                interpret=interpret, pipeline_depth=depth))
             args = (x, wl, wc, wr)          # x stands in for dy
         elif key.direction == "pair_fwd":
             pair = lambda a: jnp.stack([a, a])
             run = jax.jit(lambda xx, l2, w2, c2, r2: _mk.gspn_scan_bidir_pallas(
                 xx, {"wl": w2, "wc": c2, "wr": r2}, l2,
                 channels_per_weight=cpw, row_tile=t,
-                interpret=interpret, carry_dtype=carry))
+                interpret=interpret, carry_dtype=carry,
+                pipeline_depth=depth))
             args = (x, pair(lam), pair(wl), pair(wc), pair(wr))
         elif key.direction == "pair_bwd":
             pair = lambda a: jnp.stack([a, a])
             run = jax.jit(lambda d2, w2, c2, r2: _mk.gspn_scan_bidir_bwd_pallas(
                 d2, w2, c2, r2, channels_per_weight=cpw, row_tile=t,
-                interpret=interpret))
+                interpret=interpret, pipeline_depth=depth))
             args = (pair(x), pair(wl), pair(wc), pair(wr))
         elif key.direction == "quad":
             quad = lambda a: jnp.stack([a] * 4)
             run = jax.jit(lambda xx, l4, w4, c4, r4: _mk.gspn_scan_quad_pallas(
                 xx, {"wl": w4, "wc": c4, "wr": r4}, l4,
                 channels_per_weight=cpw, row_tile=t,
-                interpret=interpret, carry_dtype=carry))
+                interpret=interpret, carry_dtype=carry,
+                pipeline_depth=depth))
             args = (x, quad(lam), quad(wl), quad(wc), quad(wr))
         else:  # pragma: no cover — ScanKey.__post_init__ guards this
             raise ValueError(key.direction)
@@ -388,6 +485,7 @@ def autotune_key(key: ScanKey, *, candidates=None, iters: int = 3,
     cache = cache if cache is not None else get_cache()
     if not cands:
         entry = {"row_tile": heuristic_row_tile(key), "double_buffer": True,
+                 "pipeline_depth": heuristic_pipeline_depth(key),
                  "us": None, "n_grid_steps": None, "working_set_bytes": None,
                  "source": "heuristic"}
         cache.store(key, entry)
@@ -404,6 +502,7 @@ def autotune_key(key: ScanKey, *, candidates=None, iters: int = 3,
     entry = {
         "row_tile": best.row_tile,
         "double_buffer": best.double_buffer,
+        "pipeline_depth": best.pipeline_depth,
         "us": round(best_us, 3),
         "n_grid_steps": key.h // best.row_tile,
         "working_set_bytes": best.working_set(key),
@@ -427,7 +526,9 @@ WARM_SPECS = [
     (128, 128, 8, "fwd", "pallas", "float32", True),
     (128, 128, 8, "fwd", "pallas", "bfloat16", True),
     (128, 128, 8, "bwd", "pallas", "float32", True),
+    (128, 128, 8, "bwd", "pallas", "bfloat16", True),
     (128, 128, 8, "pair_fwd", "multidir", "float32", True),
+    (128, 128, 8, "pair_fwd", "multidir", "bfloat16", True),
     (128, 128, 8, "pair_bwd", "multidir", "float32", True),
     (192, 192, 8, "fwd", "pallas", "float32", True),
 ]
@@ -444,7 +545,8 @@ def warm(specs=None, *, cache: TuningCache | None = None, iters: int = 2,
                              interpret=interpret)
         if verbose:
             print(f"[autotune] {key.encode()} -> row_tile="
-                  f"{entry['row_tile']} ({entry['us']}us)", file=sys.stderr)
+                  f"{entry['row_tile']} depth={entry['pipeline_depth']} "
+                  f"({entry['us']}us)", file=sys.stderr)
     return cache
 
 
@@ -456,13 +558,17 @@ def main(argv=None) -> int:
     ap_warm.add_argument("--out", default="",
                          help="write the cache here (default: seed path)")
     ap_warm.add_argument("--iters", type=int, default=2)
+    ap_warm.add_argument("--warmup", type=int, default=1,
+                         help="discarded runs per candidate before timing "
+                              "(2+ recommended when re-measuring the seed)")
     sub.add_parser("show", help="print the resolved cache")
     args = ap.parse_args(argv)
 
     if args.cmd == "warm":
         # Measure into a FRESH cache: the artifact must contain only this
         # device's fresh measurements, never the layered seed/env entries.
-        cache = warm(cache=TuningCache(), iters=args.iters)
+        cache = warm(cache=TuningCache(), iters=args.iters,
+                     warmup=args.warmup)
         path = cache.save(args.out or SEED_CACHE_PATH)
         print(f"[autotune] wrote {len(cache)} entries to {path}")
         return 0

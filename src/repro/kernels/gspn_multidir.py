@@ -43,22 +43,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import autotune
-from repro.kernels.gspn_scan import (CompilerParams, _row, _shift_left,
-                                     _shift_right)
+from repro.kernels.gspn_scan import (CompilerParams, _dir_scan, _masked_shifts,
+                                     _row, _shift_left, _shift_right,
+                                     _stage_rows)
 
 
-def _pair_row_tile(h: int, w: int, c: int, direction: str, dtype,
-                   carry_dtype=jnp.float32, *, channel_shared: bool = False,
-                   interpret: bool = True) -> int:
-    """Tile for the fused pair/quad kernels: measured cache entry when the
-    tuner knows this (device, shape, direction, dtype-policy) key,
-    VMEM-heuristic fallback otherwise (DESIGN.md §11).  The fallback
-    shares the single-direction kernels' cap so fused/unfused tile
-    identically on a cache miss."""
-    return autotune.row_tile_for(
-        h, w, c=c, direction=direction, impl="multidir", dtype=dtype,
-        carry_dtype=carry_dtype, channel_shared=channel_shared,
-        interpret=interpret)
+def _pair_plan(h: int, w: int, c: int, direction: str, dtype,
+               carry_dtype=jnp.float32, *, channel_shared: bool = False,
+               interpret: bool = True, row_tile: int | None = None,
+               pipeline_depth: int | None = None) -> "autotune.ScanPlan":
+    """Tile + pipeline depth for the fused pair/quad kernels: measured
+    cache entry when the tuner knows this (device, shape, direction,
+    dtype-policy) key, VMEM-heuristic fallback otherwise (DESIGN.md
+    §11/§12).  The fallback shares the single-direction kernels' cap so
+    fused/unfused tile identically on a cache miss."""
+    return autotune.plan_for(
+        h, w, c=c, direction=direction, impl="multidir",
+        dtype=str(jnp.dtype(dtype)),
+        carry_dtype=str(jnp.dtype(carry_dtype)),
+        channel_shared=channel_shared, interpret=interpret,
+        row_tile=row_tile, pipeline_depth=pipeline_depth)
 
 
 # ---------------------------------------------------------------------------
@@ -92,49 +96,127 @@ def _kernel(row_tile,
         carry_ref[...].astype(jnp.float32)).astype(carry_ref.dtype)
 
 
+def _kernel_staged(row_tile, cpw,
+                   x_ref, wl_ref, wc_ref, wr_ref, lam_ref, o_ref,
+                   carry_ref):
+    """Depth-2 pair/quad forward kernel: all planes of one direction per
+    grid step, staged streams (DESIGN.md §12).  The refs arrive with the
+    direction axis already peeled (``.at[0]``); same f32 recurrence and
+    operation order as ``_kernel`` vectorised over the plane axis.  The
+    sequential loop is a ref-free ``_dir_scan`` whose row direction
+    follows the grid's direction axis — no staged data is ever flipped
+    (identical values row for row to the legacy ``r_eff`` walk)."""
+    del row_tile
+    d = pl.program_id(0)
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    xs = _stage_rows(x_ref)                         # (T, G, W) f32
+    lams = _stage_rows(lam_ref)
+    wls = _stage_rows(wl_ref, cpw)
+    wcs = _stage_rows(wc_ref, cpw)
+    wrs = _stage_rows(wr_ref, cpw)
+    sr, sl = _masked_shifts(xs.shape[1:])
+
+    # lam*x stays inside the step — see the parity note in
+    # gspn_scan._fwd_kernel_staged (FMA contraction vs depth 1).
+    def step(h_prev, row):
+        x_r, wl_r, wc_r, wr_r, lam_r = row
+        h_new = (
+            wl_r * sr(h_prev)
+            + wc_r * h_prev
+            + wr_r * sl(h_prev)
+            + lam_r * x_r
+        )
+        return h_new, h_new
+
+    h0 = carry_ref[...].astype(jnp.float32)[:, 0, :]         # (G, W)
+    # T->B walks rows forward; B->T walks them backward.
+    h_last, ys = _dir_scan(step, h0, (xs, wls, wcs, wrs, lams),
+                           d % 2 != 0)
+    carry_ref[...] = h_last[:, None, :].astype(carry_ref.dtype)
+    o_ref[...] = jnp.swapaxes(ys, 0, 1).astype(o_ref.dtype)
+
+
 def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
                            row_tile: int | None = None,
                            interpret: bool = True,
-                           carry_dtype=jnp.float32):
+                           carry_dtype=jnp.float32,
+                           pipeline_depth: int | None = None):
     """x: (G, H, W); taps: dict with wl/wc/wr each (2, G_w, H, W);
     lam2: (2, G, H, W).  Returns (2, G, H, W) — both directional scans.
-    Streams in the operands' dtype, carries in ``carry_dtype``."""
+    Streams in the operands' dtype, carries in ``carry_dtype``;
+    ``pipeline_depth=2`` is the staged pipeline (DESIGN.md §12)."""
     g, h, w = x.shape
     cpw = channels_per_weight
+    gw = g // cpw
     carry_dtype = jnp.dtype(carry_dtype)
-    row_tile = row_tile or _pair_row_tile(
-        h, w, g, "pair_fwd", x.dtype, carry_dtype,
-        channel_shared=cpw > 1, interpret=interpret)
+    plan = _pair_plan(h, w, g, "pair_fwd", x.dtype, carry_dtype,
+                      channel_shared=cpw > 1, interpret=interpret,
+                      row_tile=row_tile, pipeline_depth=pipeline_depth)
+    row_tile, pipeline_depth = plan.row_tile, plan.pipeline_depth
     assert h % row_tile == 0
+    assert pipeline_depth in (1, 2), pipeline_depth
     n_tiles = h // row_tile
 
     def ti_eff(d, ti):
         return jnp.where(d == 0, ti, n_tiles - 1 - ti)
 
-    # x is SHARED: both directions read the same tiles (in opposite order).
-    x_spec = pl.BlockSpec((1, row_tile, w),
-                          lambda d, gi, ti: (gi, ti_eff(d, ti), 0))
-    wt_spec = pl.BlockSpec((1, 1, row_tile, w),
-                           lambda d, gi, ti: (d, gi // cpw, ti_eff(d, ti), 0))
-    lam_spec = pl.BlockSpec((1, 1, row_tile, w),
-                            lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
-    out_spec = pl.BlockSpec((1, 1, row_tile, w),
-                            lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+    if pipeline_depth == 1:
+        # x is SHARED: both directions read the same tiles (opposite order).
+        x_spec = pl.BlockSpec((1, row_tile, w),
+                              lambda d, gi, ti: (gi, ti_eff(d, ti), 0))
+        wt_spec = pl.BlockSpec(
+            (1, 1, row_tile, w),
+            lambda d, gi, ti: (d, gi // cpw, ti_eff(d, ti), 0))
+        lam_spec = pl.BlockSpec((1, 1, row_tile, w),
+                                lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+        out_spec = pl.BlockSpec((1, 1, row_tile, w),
+                                lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+
+        def kernel(x_ref, wl_ref, wc_ref, wr_ref, lam_ref, o_ref, carry_ref):
+            _kernel(row_tile, x_ref,
+                    wl_ref.at[0], wc_ref.at[0], wr_ref.at[0], lam_ref.at[0],
+                    o_ref.at[0], carry_ref)
+
+        return pl.pallas_call(
+            kernel,
+            grid=(2, g, n_tiles),
+            in_specs=[x_spec, wt_spec, wt_spec, wt_spec, lam_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((2, g, h, w), x.dtype),
+            scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
+            compiler_params=CompilerParams(
+                dimension_semantics=("arbitrary",) * 3),
+            interpret=interpret,
+        )(x, taps["wl"], taps["wc"], taps["wr"], lam2)
+
+    x_spec = pl.BlockSpec((g, row_tile, w),
+                          lambda d, ti: (0, ti_eff(d, ti), 0))
+    wt_spec = pl.BlockSpec((1, gw, row_tile, w),
+                           lambda d, ti: (d, 0, ti_eff(d, ti), 0))
+    lam_spec = pl.BlockSpec((1, g, row_tile, w),
+                            lambda d, ti: (d, 0, ti_eff(d, ti), 0))
+    out_spec = pl.BlockSpec((1, g, row_tile, w),
+                            lambda d, ti: (d, 0, ti_eff(d, ti), 0))
 
     def kernel(x_ref, wl_ref, wc_ref, wr_ref, lam_ref, o_ref, carry_ref):
-        _kernel(row_tile, x_ref,
-                wl_ref.at[0], wc_ref.at[0], wr_ref.at[0], lam_ref.at[0],
-                o_ref.at[0], carry_ref)
+        _kernel_staged(row_tile, cpw, x_ref,
+                       wl_ref.at[0], wc_ref.at[0], wr_ref.at[0],
+                       lam_ref.at[0], o_ref.at[0], carry_ref)
 
     return pl.pallas_call(
         kernel,
-        grid=(2, g, n_tiles),
+        grid=(2, n_tiles),
         in_specs=[x_spec, wt_spec, wt_spec, wt_spec, lam_spec],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((2, g, h, w), x.dtype),
-        scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
+        scratch_shapes=[pltpu.VMEM((g, 1, w), carry_dtype)],
         compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",) * 3),
+            dimension_semantics=("arbitrary",) * 2),
         interpret=interpret,
     )(x, taps["wl"], taps["wc"], taps["wr"], lam2)
 
@@ -179,48 +261,117 @@ def _bwd_pair_kernel(row_tile,
     jax.lax.fori_loop(0, row_tile, body, 0)
 
 
+def _bwd_pair_kernel_staged(row_tile, cpw,
+                            dy_ref, wl_ref, wc_ref, wr_ref, g_ref,
+                            carry_ref):
+    """Depth-2 fused adjoint: all planes of one direction per grid step,
+    staged streams, three f32 tap·adjoint carry rows per plane riding the
+    ``_dir_scan`` carry.  Direction 0's adjoint walks rows last→first —
+    the scan's traced ``reverse`` flag, no staged data is flipped."""
+    del row_tile
+    d = pl.program_id(0)
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    dys = _stage_rows(dy_ref)                       # (T, G, W) f32
+    wls = _stage_rows(wl_ref, cpw)
+    wcs = _stage_rows(wc_ref, cpw)
+    wrs = _stage_rows(wr_ref, cpw)
+    sr, sl = _masked_shifts(dys.shape[1:])
+
+    def step(prods, row):
+        dy_r, wl_r, wc_r, wr_r = row
+        prod_l, prod_c, prod_r = prods
+        g_row = (
+            dy_r
+            + sl(prod_l)
+            + prod_c
+            + sr(prod_r)
+        )
+        return (wl_r * g_row, wc_r * g_row, wr_r * g_row), g_row
+
+    p0 = (carry_ref[0][:, 0, :], carry_ref[1][:, 0, :],
+          carry_ref[2][:, 0, :])
+    # Adjoint traversal is opposite to the forward one per direction.
+    prods, ys = _dir_scan(step, p0, (dys, wls, wcs, wrs), d == 0)
+    carry_ref[0], carry_ref[1], carry_ref[2] = \
+        (p[:, None, :] for p in prods)
+    g_ref[...] = jnp.swapaxes(ys, 0, 1).astype(g_ref.dtype)
+
+
 def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
                                channels_per_weight: int = 1,
                                row_tile: int | None = None,
-                               interpret: bool = True):
+                               interpret: bool = True,
+                               pipeline_depth: int | None = None):
     """Fused adjoint of the pair scan.  dy2: (2, G, H, W); w*2:
     (2, G_w, H, W), all in the UNFLIPPED layout.  Returns g2 = dL/dh
     (pre-output-layer) as (2, G, H, W) f32 — one launch, no flipped
     copies."""
     _, g_dim, h, w = dy2.shape
     cpw = channels_per_weight
+    gw = g_dim // cpw
     # Streamed dtype is dy2's (bf16 tiles halve the working set); the
     # adjoint carry is three f32 tap·adjoint rows regardless of policy
     # (encoded by the tuner's "pair_bwd" direction).
-    row_tile = row_tile or _pair_row_tile(
-        h, w, g_dim, "pair_bwd", dy2.dtype,
-        channel_shared=cpw > 1, interpret=interpret)
+    plan = _pair_plan(h, w, g_dim, "pair_bwd", dy2.dtype,
+                      channel_shared=cpw > 1, interpret=interpret,
+                      row_tile=row_tile, pipeline_depth=pipeline_depth)
+    row_tile, pipeline_depth = plan.row_tile, plan.pipeline_depth
     assert h % row_tile == 0
+    assert pipeline_depth in (1, 2), pipeline_depth
     n_tiles = h // row_tile
 
     def ti_eff(d, ti):
         # Opposite tile order to the forward pass, per direction.
         return jnp.where(d == 0, n_tiles - 1 - ti, ti)
 
-    wt_spec = pl.BlockSpec((1, 1, row_tile, w),
-                           lambda d, gi, ti: (d, gi // cpw, ti_eff(d, ti), 0))
-    data_spec = pl.BlockSpec((1, 1, row_tile, w),
-                             lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+    if pipeline_depth == 1:
+        wt_spec = pl.BlockSpec(
+            (1, 1, row_tile, w),
+            lambda d, gi, ti: (d, gi // cpw, ti_eff(d, ti), 0))
+        data_spec = pl.BlockSpec((1, 1, row_tile, w),
+                                 lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+
+        def kernel(dy_ref, wl_ref, wc_ref, wr_ref, g_ref, carry_ref):
+            _bwd_pair_kernel(row_tile, dy_ref.at[0],
+                             wl_ref.at[0], wc_ref.at[0], wr_ref.at[0],
+                             g_ref.at[0], carry_ref)
+
+        return pl.pallas_call(
+            kernel,
+            grid=(2, g_dim, n_tiles),
+            in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
+            out_specs=data_spec,
+            out_shape=jax.ShapeDtypeStruct((2, g_dim, h, w), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((3, 1, w), jnp.float32)],
+            compiler_params=CompilerParams(
+                dimension_semantics=("arbitrary",) * 3),
+            interpret=interpret,
+        )(dy2, wl2, wc2, wr2)
+
+    wt_spec = pl.BlockSpec((1, gw, row_tile, w),
+                           lambda d, ti: (d, 0, ti_eff(d, ti), 0))
+    data_spec = pl.BlockSpec((1, g_dim, row_tile, w),
+                             lambda d, ti: (d, 0, ti_eff(d, ti), 0))
 
     def kernel(dy_ref, wl_ref, wc_ref, wr_ref, g_ref, carry_ref):
-        _bwd_pair_kernel(row_tile, dy_ref.at[0],
-                         wl_ref.at[0], wc_ref.at[0], wr_ref.at[0],
-                         g_ref.at[0], carry_ref)
+        _bwd_pair_kernel_staged(row_tile, cpw, dy_ref.at[0],
+                                wl_ref.at[0], wc_ref.at[0], wr_ref.at[0],
+                                g_ref.at[0], carry_ref)
 
     return pl.pallas_call(
         kernel,
-        grid=(2, g_dim, n_tiles),
+        grid=(2, n_tiles),
         in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
         out_specs=data_spec,
         out_shape=jax.ShapeDtypeStruct((2, g_dim, h, w), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((3, 1, w), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((3, g_dim, 1, w), jnp.float32)],
         compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",) * 3),
+            dimension_semantics=("arbitrary",) * 2),
         interpret=interpret,
     )(dy2, wl2, wc2, wr2)
 
@@ -232,7 +383,8 @@ def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
 def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
                           row_tile: int | None = None,
                           interpret: bool = True,
-                          carry_dtype=jnp.float32):
+                          carry_dtype=jnp.float32,
+                          pipeline_depth: int | None = None):
     """All four directions in ONE ``pallas_call`` (square H == W only).
 
     x: (G, N, N).  taps4: dict wl/wc/wr each (4, G_w, N, N); lam4:
@@ -250,11 +402,14 @@ def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
     g, h, w = x.shape
     assert h == w, "quad single-launch dispatch requires a square grid"
     cpw = channels_per_weight
+    gw = g // cpw
     carry_dtype = jnp.dtype(carry_dtype)
-    row_tile = row_tile or _pair_row_tile(
-        h, w, g, "quad", x.dtype, carry_dtype,
-        channel_shared=cpw > 1, interpret=interpret)
+    plan = _pair_plan(h, w, g, "quad", x.dtype, carry_dtype,
+                      channel_shared=cpw > 1, interpret=interpret,
+                      row_tile=row_tile, pipeline_depth=pipeline_depth)
+    row_tile, pipeline_depth = plan.row_tile, plan.pipeline_depth
     assert h % row_tile == 0
+    assert pipeline_depth in (1, 2), pipeline_depth
     n_tiles = h // row_tile
 
     xx = jnp.stack([x, jnp.swapaxes(x, -1, -2)])        # (2, G, N, N)
@@ -262,28 +417,57 @@ def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
     def ti_eff(d, ti):
         return jnp.where(d % 2 == 0, ti, n_tiles - 1 - ti)
 
-    xx_spec = pl.BlockSpec((1, 1, row_tile, w),
-                           lambda d, gi, ti: (d // 2, gi, ti_eff(d, ti), 0))
-    wt_spec = pl.BlockSpec((1, 1, row_tile, w),
-                           lambda d, gi, ti: (d, gi // cpw, ti_eff(d, ti), 0))
-    lam_spec = pl.BlockSpec((1, 1, row_tile, w),
-                            lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
-    out_spec = pl.BlockSpec((1, 1, row_tile, w),
-                            lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+    if pipeline_depth == 1:
+        xx_spec = pl.BlockSpec(
+            (1, 1, row_tile, w),
+            lambda d, gi, ti: (d // 2, gi, ti_eff(d, ti), 0))
+        wt_spec = pl.BlockSpec(
+            (1, 1, row_tile, w),
+            lambda d, gi, ti: (d, gi // cpw, ti_eff(d, ti), 0))
+        lam_spec = pl.BlockSpec((1, 1, row_tile, w),
+                                lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+        out_spec = pl.BlockSpec((1, 1, row_tile, w),
+                                lambda d, gi, ti: (d, gi, ti_eff(d, ti), 0))
+
+        def kernel(x_ref, wl_ref, wc_ref, wr_ref, lam_ref, o_ref, carry_ref):
+            _kernel(row_tile, x_ref.at[0],
+                    wl_ref.at[0], wc_ref.at[0], wr_ref.at[0], lam_ref.at[0],
+                    o_ref.at[0], carry_ref)
+
+        return pl.pallas_call(
+            kernel,
+            grid=(4, g, n_tiles),
+            in_specs=[xx_spec, wt_spec, wt_spec, wt_spec, lam_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((4, g, h, w), x.dtype),
+            scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
+            compiler_params=CompilerParams(
+                dimension_semantics=("arbitrary",) * 3),
+            interpret=interpret,
+        )(xx, taps4["wl"], taps4["wc"], taps4["wr"], lam4)
+
+    xx_spec = pl.BlockSpec((1, g, row_tile, w),
+                           lambda d, ti: (d // 2, 0, ti_eff(d, ti), 0))
+    wt_spec = pl.BlockSpec((1, gw, row_tile, w),
+                           lambda d, ti: (d, 0, ti_eff(d, ti), 0))
+    lam_spec = pl.BlockSpec((1, g, row_tile, w),
+                            lambda d, ti: (d, 0, ti_eff(d, ti), 0))
+    out_spec = pl.BlockSpec((1, g, row_tile, w),
+                            lambda d, ti: (d, 0, ti_eff(d, ti), 0))
 
     def kernel(x_ref, wl_ref, wc_ref, wr_ref, lam_ref, o_ref, carry_ref):
-        _kernel(row_tile, x_ref.at[0],
-                wl_ref.at[0], wc_ref.at[0], wr_ref.at[0], lam_ref.at[0],
-                o_ref.at[0], carry_ref)
+        _kernel_staged(row_tile, cpw, x_ref.at[0],
+                       wl_ref.at[0], wc_ref.at[0], wr_ref.at[0],
+                       lam_ref.at[0], o_ref.at[0], carry_ref)
 
     return pl.pallas_call(
         kernel,
-        grid=(4, g, n_tiles),
+        grid=(4, n_tiles),
         in_specs=[xx_spec, wt_spec, wt_spec, wt_spec, lam_spec],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((4, g, h, w), x.dtype),
-        scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
+        scratch_shapes=[pltpu.VMEM((g, 1, w), carry_dtype)],
         compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",) * 3),
+            dimension_semantics=("arbitrary",) * 2),
         interpret=interpret,
     )(xx, taps4["wl"], taps4["wc"], taps4["wr"], lam4)

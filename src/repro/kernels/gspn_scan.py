@@ -47,7 +47,8 @@ DEFAULT_ROW_TILE = 256
 
 def pick_row_tile(h: int, cap: int = DEFAULT_ROW_TILE, *, w: int = 128,
                   dtype_bytes: int = 4, n_streams: int = 6,
-                  carry_dtype_bytes: int = 4) -> int:
+                  carry_dtype_bytes: int = 4,
+                  pipeline_depth: int = 1) -> int:
     """Heuristic row-tile choice (the tuner's fallback tier).
 
     Thin wrapper (old signature preserved) over the single VMEM-aware
@@ -55,13 +56,14 @@ def pick_row_tile(h: int, cap: int = DEFAULT_ROW_TILE, *, w: int = 128,
     power-of-two divisor of ``h`` not exceeding ``cap`` whose streamed
     working set fits the VMEM budget.  ``dtype_bytes`` is the STREAMED
     dtype; ``carry_dtype_bytes`` the VMEM carry's.  Launch sites no longer
-    call this directly — they go through ``autotune.row_tile_for``, which
+    call this directly — they go through ``autotune.plan_for``, which
     prefers a measured cache entry and falls back to this accounting
-    (DESIGN.md §11).
+    (DESIGN.md §11/§12).
     """
     return tuning.pick_row_tile(h, w, dtype_bytes, cap=cap,
                                 n_streams=n_streams,
-                                carry_dtype_bytes=carry_dtype_bytes).row_tile
+                                carry_dtype_bytes=carry_dtype_bytes,
+                                pipeline_depth=pipeline_depth).row_tile
 
 
 def _row(ref, r):
@@ -70,17 +72,77 @@ def _row(ref, r):
 
 
 def _shift_right(v):
-    """(1, W): v[., j] -> v[., j-1], position 0 becomes 0."""
-    rolled = jnp.roll(v, 1, axis=1)
-    idx = jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
+    """(..., W): v[..., j] -> v[..., j-1], position 0 becomes 0."""
+    rolled = jnp.roll(v, 1, axis=-1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, v.shape, v.ndim - 1)
     return jnp.where(idx == 0, 0.0, rolled)
 
 
 def _shift_left(v):
-    """(1, W): v[., j] -> v[., j+1], last position becomes 0."""
-    rolled = jnp.roll(v, -1, axis=1)
-    idx = jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
-    return jnp.where(idx == v.shape[1] - 1, 0.0, rolled)
+    """(..., W): v[..., j] -> v[..., j+1], last position becomes 0."""
+    rolled = jnp.roll(v, -1, axis=-1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, v.shape, v.ndim - 1)
+    return jnp.where(idx == v.shape[-1] - 1, 0.0, rolled)
+
+
+# ---------------------------------------------------------------------------
+# Depth-2 staging helpers (DESIGN.md §12).
+#
+# The staged pipeline widens every streamed block to f32 ONCE per grid
+# step (one bulk convert instead of a per-row widen through the narrow-
+# dtype retiling path), broadcasts channel-shared weights in VMEM, runs
+# the row recurrence as a ``lax.scan`` over the STAGED VALUES — so the
+# sequential loop touches no ref at all: no per-row masked loads, no
+# per-row stores — and writes the scan's stacked f32 output stage back
+# through ONE bulk downcast.  Between grid steps the BlockSpec revolving
+# buffers keep the next tile's DMA in flight while the current tile
+# computes; the f32 carry block never leaves VMEM.
+# ---------------------------------------------------------------------------
+
+def _stage_widen(ref, cpw: int = 1):
+    """Bulk-load a (Gw, T, W) block as f32, broadcast to (Gw*cpw, T, W)."""
+    staged = ref[...].astype(jnp.float32)
+    if cpw > 1:
+        gw = staged.shape[0]
+        staged = jnp.broadcast_to(staged[:, None],
+                                  (gw, cpw) + staged.shape[1:])
+        staged = staged.reshape((gw * cpw,) + staged.shape[2:])
+    return staged
+
+
+def _stage_rows(ref, cpw: int = 1):
+    """Stage a (Gw, T, W) block as (T, G, W) f32 scan inputs."""
+    return jnp.swapaxes(_stage_widen(ref, cpw), 0, 1)
+
+
+def _masked_shifts(shape):
+    """Edge-masked lane shifts with the iota/compare hoisted OUT of the
+    sequential loop: the masks are built once per grid step, so each scan
+    step pays one roll + one select per shift instead of re-deriving the
+    edge mask.  Identical values to ``_shift_right``/``_shift_left``."""
+    idx = jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1)
+    first, last = idx == 0, idx == shape[-1] - 1
+
+    def sr(v):
+        return jnp.where(first, 0.0, jnp.roll(v, 1, axis=-1))
+
+    def sl(v):
+        return jnp.where(last, 0.0, jnp.roll(v, -1, axis=-1))
+
+    return sr, sl
+
+
+def _dir_scan(step, init, xs, reverse):
+    """``lax.scan`` whose row direction follows a TRACED flag: the staged
+    multidir kernels pick the reverse walk per grid step (direction axis)
+    without flipping any staged data — ``reverse=True`` consumes rows
+    last→first and stacks each output at its row's natural position,
+    exactly the legacy kernels' ``r_eff`` indexing (identical values row
+    for row, so depth parity stays bitwise)."""
+    return jax.lax.cond(
+        reverse,
+        lambda: jax.lax.scan(step, init, xs, reverse=True),
+        lambda: jax.lax.scan(step, init, xs))
 
 
 # ---------------------------------------------------------------------------
@@ -112,40 +174,112 @@ def _fwd_kernel(row_tile, chunk_tiles,
         carry_ref[...].astype(jnp.float32)).astype(carry_ref.dtype)
 
 
+def _fwd_kernel_staged(row_tile, chunk_tiles, cpw,
+                       x_ref, wl_ref, wc_ref, wr_ref, lam_ref, o_ref,
+                       carry_ref):
+    """Depth-2 forward kernel: all G planes per grid step, staged streams.
+
+    Same f32 recurrence and operation order as ``_fwd_kernel`` vectorised
+    over the plane axis — the two depths are bit-identical (the
+    conformance grid asserts exact agreement).  The recurrence runs as a
+    ``lax.scan`` over the staged rows, so the only ref traffic per grid
+    step is one bulk load per stream and one bulk downcast store."""
+    del row_tile
+    t = pl.program_id(0)
+
+    @pl.when(t % chunk_tiles == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    xs = _stage_rows(x_ref)                         # (T, G, W) f32
+    lams = _stage_rows(lam_ref)
+    wls = _stage_rows(wl_ref, cpw)                  # (Gw,T,W) -> (T,G,W)
+    wcs = _stage_rows(wc_ref, cpw)
+    wrs = _stage_rows(wr_ref, cpw)
+    sr, sl = _masked_shifts(xs.shape[1:])
+
+    # NOTE: lam*x stays INSIDE the step on purpose — hoisting it to a bulk
+    # multiply changes which mul/add pairs the CPU backend contracts into
+    # FMAs, breaking the bitwise depth-1 agreement in f32 streams.
+    def step(h_prev, row):
+        x_r, wl_r, wc_r, wr_r, lam_r = row
+        h_new = (
+            wl_r * sr(h_prev)
+            + wc_r * h_prev
+            + wr_r * sl(h_prev)
+            + lam_r * x_r
+        )
+        return h_new, h_new
+
+    h0 = carry_ref[...].astype(jnp.float32)[:, 0, :]         # (G, W)
+    h_last, ys = jax.lax.scan(step, h0, (xs, wls, wcs, wrs, lams))
+    carry_ref[...] = h_last[:, None, :].astype(carry_ref.dtype)
+    # ONE bulk downcast writeback per tile — the per-row narrow-dtype
+    # store was the bf16 cliff (DESIGN.md §12).
+    o_ref[...] = jnp.swapaxes(ys, 0, 1).astype(o_ref.dtype)
+
+
 def gspn_scan_fwd_pallas(x, wl, wc, wr, lam, *, channels_per_weight: int = 1,
                          chunk: int | None = None, row_tile: int | None = None,
-                         interpret: bool = True, carry_dtype=jnp.float32):
+                         interpret: bool = True, carry_dtype=jnp.float32,
+                         pipeline_depth: int | None = None):
     """Fused forward line scan.  Returns h: (G, H, W) in x.dtype.
 
     Streamed tiles take the operands' dtype; the VMEM carry row persists
     in ``carry_dtype`` (f32 by default — the mixed-precision policy's
-    accumulator discipline, DESIGN.md §10).
+    accumulator discipline, DESIGN.md §10).  ``pipeline_depth`` selects
+    the kernel structure (DESIGN.md §12): 1 walks planes × tiles with
+    per-row loads/stores (the classic stream); 2 blocks all planes into
+    each grid step and stages the streams in f32 — bulk widen on load,
+    one bulk downcast writeback — so narrow dtypes never pay a per-row
+    retiling penalty.  ``None`` resolves both the tile and the depth
+    through the autotuner (measured cache entry, heuristic fallback).
     """
     g, h, w = x.shape
     cpw = channels_per_weight
+    gw = g // cpw
     assert wl.shape[0] * cpw == g, (wl.shape, g, cpw)
     chunk = h if chunk is None else chunk
     assert h % chunk == 0, (h, chunk)
     carry_dtype = jnp.dtype(carry_dtype)
-    row_tile = row_tile or autotune.row_tile_for(
+    plan = autotune.plan_for(
         min(h, chunk), w, c=g, direction="fwd", impl="pallas",
-        dtype=x.dtype, carry_dtype=carry_dtype,
-        channel_shared=cpw > 1, interpret=interpret)
+        dtype=str(jnp.dtype(x.dtype)), carry_dtype=str(carry_dtype),
+        channel_shared=cpw > 1, interpret=interpret,
+        row_tile=row_tile, pipeline_depth=pipeline_depth)
+    row_tile, pipeline_depth = plan.row_tile, plan.pipeline_depth
     assert chunk % row_tile == 0, (chunk, row_tile)
+    assert pipeline_depth in (1, 2), pipeline_depth
     chunk_tiles = chunk // row_tile
 
-    data_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi, ti, 0))
-    wt_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi // cpw, ti, 0))
+    if pipeline_depth == 1:
+        data_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi, ti, 0))
+        wt_spec = pl.BlockSpec((1, row_tile, w),
+                               lambda gi, ti: (gi // cpw, ti, 0))
+        return pl.pallas_call(
+            functools.partial(_fwd_kernel, row_tile, chunk_tiles),
+            grid=(g, h // row_tile),
+            in_specs=[data_spec, wt_spec, wt_spec, wt_spec, data_spec],
+            out_specs=data_spec,
+            out_shape=jax.ShapeDtypeStruct((g, h, w), x.dtype),
+            scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
+            compiler_params=CompilerParams(
+                dimension_semantics=("arbitrary", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(x, wl, wc, wr, lam)
 
+    data_spec = pl.BlockSpec((g, row_tile, w), lambda ti: (0, ti, 0))
+    wt_spec = pl.BlockSpec((gw, row_tile, w), lambda ti: (0, ti, 0))
     return pl.pallas_call(
-        functools.partial(_fwd_kernel, row_tile, chunk_tiles),
-        grid=(g, h // row_tile),
+        functools.partial(_fwd_kernel_staged, row_tile, chunk_tiles, cpw),
+        grid=(h // row_tile,),
         in_specs=[data_spec, wt_spec, wt_spec, wt_spec, data_spec],
         out_specs=data_spec,
         out_shape=jax.ShapeDtypeStruct((g, h, w), x.dtype),
-        scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
+        scratch_shapes=[pltpu.VMEM((g, 1, w), carry_dtype)],
         compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"),
+            dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,
     )(x, wl, wc, wr, lam)
@@ -188,23 +322,68 @@ def _bwd_kernel(row_tile, chunk_tiles,
     jax.lax.fori_loop(0, row_tile, body, 0)
 
 
+def _bwd_kernel_staged(row_tile, chunk_tiles, cpw,
+                       dy_ref, wl_ref, wc_ref, wr_ref, g_ref, carry_ref):
+    """Depth-2 adjoint kernel: all planes per grid step, staged streams.
+    Same f32 recurrence and operation order as ``_bwd_kernel`` vectorised
+    over the plane axis (the three tap·adjoint carry rows ride the
+    ``lax.scan`` carry instead of round-tripping through scratch —
+    identical f32 values either way)."""
+    del row_tile
+    t = pl.program_id(0)
+
+    @pl.when(t % chunk_tiles == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    dys = _stage_rows(dy_ref)                       # (T, G, W) f32
+    wls = _stage_rows(wl_ref, cpw)
+    wcs = _stage_rows(wc_ref, cpw)
+    wrs = _stage_rows(wr_ref, cpw)
+    sr, sl = _masked_shifts(dys.shape[1:])
+
+    def step(prods, row):
+        dy_r, wl_r, wc_r, wr_r = row
+        prod_l, prod_c, prod_r = prods
+        g_row = (
+            dy_r
+            + sl(prod_l)
+            + prod_c
+            + sr(prod_r)
+        )
+        return (wl_r * g_row, wc_r * g_row, wr_r * g_row), g_row
+
+    p0 = (carry_ref[0][:, 0, :], carry_ref[1][:, 0, :],
+          carry_ref[2][:, 0, :])
+    prods, ys = jax.lax.scan(step, p0, (dys, wls, wcs, wrs))
+    carry_ref[0], carry_ref[1], carry_ref[2] = \
+        (p[:, None, :] for p in prods)
+    g_ref[...] = jnp.swapaxes(ys, 0, 1).astype(g_ref.dtype)
+
+
 def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, channels_per_weight: int = 1,
                          chunk: int | None = None, row_tile: int | None = None,
-                         interpret: bool = True):
+                         interpret: bool = True,
+                         pipeline_depth: int | None = None):
     """Adjoint scan.  Inputs are in ORIGINAL orientation; flipping is done
-    here.  Returns g = dL/dh pre-output-layer: (G, H, W) f32."""
+    here.  Returns g = dL/dh pre-output-layer: (G, H, W) f32.
+    ``pipeline_depth=2`` is the staged pipeline (DESIGN.md §12)."""
     g_dim, h, w = dy.shape
     cpw = channels_per_weight
+    gw = g_dim // cpw
     chunk = h if chunk is None else chunk
     assert h % chunk == 0, (h, chunk)
     # The streamed operands are dy + the three taps (their real dtype —
     # bf16 streams unlock 2× larger row tiles); the adjoint carry is three
     # f32 tap·adjoint rows regardless of the policy (the tuner's "bwd"
     # direction encodes both the 5-stream count and the 3-row carry).
-    row_tile = row_tile or autotune.row_tile_for(
+    plan = autotune.plan_for(
         min(h, chunk), w, c=g_dim, direction="bwd", impl="pallas",
-        dtype=dy.dtype, carry_dtype=jnp.float32,
-        channel_shared=cpw > 1, interpret=interpret)
+        dtype=str(jnp.dtype(dy.dtype)), carry_dtype="float32",
+        channel_shared=cpw > 1, interpret=interpret,
+        row_tile=row_tile, pipeline_depth=pipeline_depth)
+    row_tile, pipeline_depth = plan.row_tile, plan.pipeline_depth
+    assert pipeline_depth in (1, 2), pipeline_depth
     chunk_tiles = chunk // row_tile
 
     dy_f = jnp.flip(dy, axis=1)
@@ -212,19 +391,35 @@ def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, channels_per_weight: int = 1,
     wc_f = jnp.flip(wc, axis=1)
     wr_f = jnp.flip(wr, axis=1)
 
-    data_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi, ti, 0))
-    wt_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi // cpw, ti, 0))
-
-    g_f = pl.pallas_call(
-        functools.partial(_bwd_kernel, row_tile, chunk_tiles),
-        grid=(g_dim, h // row_tile),
-        in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
-        out_specs=data_spec,
-        out_shape=jax.ShapeDtypeStruct((g_dim, h, w), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((3, 1, w), jnp.float32)],
-        compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(dy_f, wl_f, wc_f, wr_f)
+    if pipeline_depth == 1:
+        data_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi, ti, 0))
+        wt_spec = pl.BlockSpec((1, row_tile, w),
+                               lambda gi, ti: (gi // cpw, ti, 0))
+        g_f = pl.pallas_call(
+            functools.partial(_bwd_kernel, row_tile, chunk_tiles),
+            grid=(g_dim, h // row_tile),
+            in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
+            out_specs=data_spec,
+            out_shape=jax.ShapeDtypeStruct((g_dim, h, w), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((3, 1, w), jnp.float32)],
+            compiler_params=CompilerParams(
+                dimension_semantics=("arbitrary", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(dy_f, wl_f, wc_f, wr_f)
+    else:
+        data_spec = pl.BlockSpec((g_dim, row_tile, w), lambda ti: (0, ti, 0))
+        wt_spec = pl.BlockSpec((gw, row_tile, w), lambda ti: (0, ti, 0))
+        g_f = pl.pallas_call(
+            functools.partial(_bwd_kernel_staged, row_tile, chunk_tiles, cpw),
+            grid=(h // row_tile,),
+            in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
+            out_specs=data_spec,
+            out_shape=jax.ShapeDtypeStruct((g_dim, h, w), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((3, g_dim, 1, w), jnp.float32)],
+            compiler_params=CompilerParams(
+                dimension_semantics=("arbitrary",),
+            ),
+            interpret=interpret,
+        )(dy_f, wl_f, wc_f, wr_f)
     return jnp.flip(g_f, axis=1)

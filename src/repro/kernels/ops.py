@@ -58,6 +58,10 @@ class ScanConfig:
     # operands' dtype; the VMEM carry row persists in carry_dtype.  Must
     # stay hashable — ScanConfig is a nondiff custom_vjp argument.
     carry_dtype: str = "float32"
+    # None => each Pallas launch resolves the staging depth through the
+    # autotuner (DESIGN.md §12); 1 forces the legacy revolving-buffer
+    # kernels, 2 the staged pipeline.
+    pipeline_depth: int | None = None
 
 
 def _resolve_impl(impl: str) -> str:
@@ -88,7 +92,8 @@ def _fwd_dispatch(cfg: ScanConfig, x, wl, wc, wr, lam):
             x, wl, wc, wr, lam,
             channels_per_weight=cfg.channels_per_weight,
             row_tile=cfg.row_tile, interpret=cfg.interpret,
-            carry_dtype=jnp.dtype(cfg.carry_dtype))
+            carry_dtype=jnp.dtype(cfg.carry_dtype),
+            pipeline_depth=cfg.pipeline_depth)
     if impl == "xla":
         return _ref.gspn_scan_ref(x, wl, wc, wr, lam)
     if impl == "per_step":
@@ -138,7 +143,8 @@ def _gspn_core_bwd(cfg, res, dy):
     if impl == "pallas":
         g = _pk.gspn_scan_bwd_pallas(
             dy, wl, wc, wr, channels_per_weight=cpw,
-            row_tile=cfg.row_tile, interpret=cfg.interpret)
+            row_tile=cfg.row_tile, interpret=cfg.interpret,
+            pipeline_depth=cfg.pipeline_depth)
     else:
         wl_b = _ref._broadcast_w(wl, g_dim)
         wc_b = _ref._broadcast_w(wc, g_dim)
@@ -171,14 +177,16 @@ def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
               impl: str = "auto", row_tile: int | None = None,
               interpret: bool = True, mesh=None, seq_axis: str = "seq",
               sp_strategy: str = "auto", carry_dtype="float32",
-              sp_boundary_dtype=None):
+              sp_boundary_dtype=None, pipeline_depth: int | None = None):
     """GSPN line scan with optional GSPN-local chunking.
 
     x, lam: (G, H, W); wl/wc/wr: (G_w, H, W), G_w divides G.
     Returns h: (G, H, W) in x.dtype.  Differentiable in all tensor args.
     ``mesh``/``seq_axis``/``sp_strategy``/``sp_boundary_dtype`` only apply
     to ``impl="sp"``.  ``carry_dtype`` is the fused kernels' VMEM carry
-    dtype (f32 under the default policy, DESIGN.md §10).
+    dtype (f32 under the default policy, DESIGN.md §10);
+    ``pipeline_depth`` selects the kernel pipeline (DESIGN.md §12,
+    None = autotuned).
     """
     if impl == "sp":
         from repro.parallel.gspn_sp import gspn_scan_sp
@@ -186,7 +194,8 @@ def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
                             axis_name=seq_axis, strategy=sp_strategy,
                             row_tile=row_tile, interpret=interpret,
                             chunk=chunk, boundary_dtype=sp_boundary_dtype,
-                            carry_dtype=carry_dtype)
+                            carry_dtype=carry_dtype,
+                            pipeline_depth=pipeline_depth)
     g, h, w = x.shape
     gw = wl.shape[0]
     assert g % gw == 0, (g, gw)
@@ -206,14 +215,16 @@ def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
 
         cfg = ScanConfig(impl=impl, channels_per_weight=1,
                          row_tile=row_tile, interpret=interpret,
-                         carry_dtype=str(jnp.dtype(carry_dtype)))
+                         carry_dtype=str(jnp.dtype(carry_dtype)),
+                         pipeline_depth=pipeline_depth)
         out = _gspn_core(cfg, fold(x), fold(wl_b), fold(wc_b), fold(wr_b),
                          fold(lam))
         return out.reshape(g, h, w)
 
     cfg = ScanConfig(impl=impl, channels_per_weight=cpw,
                      row_tile=row_tile, interpret=interpret,
-                     carry_dtype=str(jnp.dtype(carry_dtype)))
+                     carry_dtype=str(jnp.dtype(carry_dtype)),
+                     pipeline_depth=pipeline_depth)
     return _gspn_core(cfg, x, wl, wc, wr, lam)
 
 
@@ -233,7 +244,8 @@ def _pair_fwd_dispatch(cfg: ScanConfig, x, wl2, wc2, wr2, lam2):
             x, {"wl": wl2, "wc": wc2, "wr": wr2}, lam2,
             channels_per_weight=cfg.channels_per_weight,
             row_tile=cfg.row_tile, interpret=cfg.interpret,
-            carry_dtype=jnp.dtype(cfg.carry_dtype))
+            carry_dtype=jnp.dtype(cfg.carry_dtype),
+            pipeline_depth=cfg.pipeline_depth)
     fwd = _ref.gspn_scan_ref(x, wl2[0], wc2[0], wr2[0], lam2[0])
     rev = _ref.gspn_scan_ref(x, wl2[1], wc2[1], wr2[1], lam2[1],
                              reverse=True)
@@ -259,7 +271,8 @@ def _gspn_pair_bwd(cfg, res, dy2):
     if impl == "multidir":
         g2 = _mk.gspn_scan_bidir_bwd_pallas(
             dy2, wl2, wc2, wr2, channels_per_weight=cpw,
-            row_tile=cfg.row_tile, interpret=cfg.interpret)
+            row_tile=cfg.row_tile, interpret=cfg.interpret,
+            pipeline_depth=cfg.pipeline_depth)
     else:
         gs = []
         for d, reverse in ((0, True), (1, False)):
@@ -303,7 +316,7 @@ def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, chunk: int | None = None,
                    impl: str = "auto", row_tile: int | None = None,
                    interpret: bool = True, mesh=None, seq_axis: str = "seq",
                    sp_strategy: str = "auto", carry_dtype="float32",
-                   sp_boundary_dtype=None):
+                   sp_boundary_dtype=None, pipeline_depth: int | None = None):
     """Fused opposite-direction pair scan with optional GSPN-local chunking.
 
     x: (G, H, W) — SHARED by both directions; wl2/wc2/wr2: (2, G_w, H, W)
@@ -333,12 +346,14 @@ def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, chunk: int | None = None,
 
         cfg = ScanConfig(impl=impl, channels_per_weight=1,
                          row_tile=row_tile, interpret=interpret,
-                         carry_dtype=str(jnp.dtype(carry_dtype)))
+                         carry_dtype=str(jnp.dtype(carry_dtype)),
+                         pipeline_depth=pipeline_depth)
         out = _gspn_pair_core(cfg, fold(x), fold2(wl_b), fold2(wc_b),
                               fold2(wr_b), fold2(lam2))
         return out.reshape(2, g, h, w)
 
     cfg = ScanConfig(impl=impl, channels_per_weight=cpw,
                      row_tile=row_tile, interpret=interpret,
-                     carry_dtype=str(jnp.dtype(carry_dtype)))
+                     carry_dtype=str(jnp.dtype(carry_dtype)),
+                     pipeline_depth=pipeline_depth)
     return _gspn_pair_core(cfg, x, wl2, wc2, wr2, lam2)

@@ -32,7 +32,8 @@ class TileChoice:
 
 def scan_working_set(row_tile: int, w: int, dtype_bytes: int,
                      n_streams: int = 6, double_buffer: bool = True,
-                     carry_dtype_bytes: int = 4) -> int:
+                     carry_dtype_bytes: int = 4,
+                     pipeline_depth: int = 1) -> int:
     """Bytes resident per grid cell: n_streams streamed tiles (+ their
     prefetch copies) + the carry row.
 
@@ -40,29 +41,45 @@ def scan_working_set(row_tile: int, w: int, dtype_bytes: int,
     ``carry_dtype_bytes`` is the VMEM carry row's dtype, kept separate so
     the accounting stays honest under the mixed-precision policy
     (DESIGN.md §10: bf16 streams, f32 carry).
+
+    ``pipeline_depth=2`` is the explicitly staged pipeline (DESIGN.md
+    §12): every streamed tile additionally keeps an f32 staging copy
+    resident — the widen-on-load input stages plus the f32 out-stage that
+    is written back in one bulk downcast — so the streamed term grows by
+    ``n_streams * row_tile * w * 4`` regardless of the stream dtype.  For
+    bf16 streams this lands the depth-2 footprint exactly on the f32
+    depth-1 footprint (2·2 + 4 = 4·2 bytes per element); for f32 streams
+    the stage is a dead copy that only shrinks the admissible tile, which
+    is why the tuner never emits depth 2 for 4-byte streams.
     """
     tile = row_tile * w * dtype_bytes
     mult = 2 if double_buffer else 1
-    return n_streams * tile * mult + w * carry_dtype_bytes
+    ws = n_streams * tile * mult + w * carry_dtype_bytes
+    if pipeline_depth >= 2:
+        ws += n_streams * row_tile * w * 4
+    return ws
 
 
 def pick_row_tile(h: int, w: int, dtype_bytes: int = 4,
                   vmem_budget: int = VMEM_BYTES, cap: int = 512,
                   n_streams: int = 6,
-                  carry_dtype_bytes: int = 4) -> TileChoice:
+                  carry_dtype_bytes: int = 4,
+                  pipeline_depth: int = 1) -> TileChoice:
     """Largest power-of-two divisor of ``h`` whose working set fits."""
     best = 1
     t = 1
     while t * 2 <= cap and h % (t * 2) == 0:
         t *= 2
         if scan_working_set(t, w, dtype_bytes, n_streams,
-                            carry_dtype_bytes=carry_dtype_bytes) \
+                            carry_dtype_bytes=carry_dtype_bytes,
+                            pipeline_depth=pipeline_depth) \
                 <= vmem_budget:
             best = t
     return TileChoice(row_tile=best,
                       working_set_bytes=scan_working_set(
                           best, w, dtype_bytes, n_streams,
-                          carry_dtype_bytes=carry_dtype_bytes),
+                          carry_dtype_bytes=carry_dtype_bytes,
+                          pipeline_depth=pipeline_depth),
                       n_grid_steps=h // best)
 
 
@@ -88,13 +105,16 @@ def policy_itemsizes(precision) -> tuple[int, int]:
 
 def pick_row_tile_for_policy(h: int, w: int, precision,
                              vmem_budget: int = VMEM_BYTES, cap: int = 512,
-                             n_streams: int = 6) -> TileChoice:
+                             n_streams: int = 6,
+                             pipeline_depth: int = 1) -> TileChoice:
     """``pick_row_tile`` with stream/carry bytes resolved from the
     mixed-precision policy instead of hand-passed constants.
 
     NOTE: the launch-site heuristic fallback caps at
     ``autotune.DEFAULT_CAP`` (256); pass ``cap=autotune.DEFAULT_CAP``
-    when reporting what a launch's fallback would pick."""
+    (and the depth the launch would run at) when reporting what a
+    launch's fallback would pick."""
     stream_b, carry_b = policy_itemsizes(precision)
     return pick_row_tile(h, w, stream_b, vmem_budget=vmem_budget, cap=cap,
-                         n_streams=n_streams, carry_dtype_bytes=carry_b)
+                         n_streams=n_streams, carry_dtype_bytes=carry_b,
+                         pipeline_depth=pipeline_depth)

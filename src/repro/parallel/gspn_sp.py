@@ -100,6 +100,9 @@ class SPConfig:
     # associative composition itself always runs in f32.  bf16 halves the
     # exchanged bytes — the one cross-device traffic of the scan.
     boundary_dtype: str = "float32"
+    # Pipeline depth of the block-local fused kernel (DESIGN.md §12);
+    # None lets the tuner pick.
+    pipeline_depth: int | None = None
 
     def resolved_strategy(self) -> str:
         if self.strategy != "auto":
@@ -192,7 +195,8 @@ def _local_scan(cfg: SPConfig, x, wl, wc, wr, lam, *, reverse: bool):
             x, wl, wc, wr, lam,
             channels_per_weight=cfg.channels_per_weight,
             row_tile=cfg.row_tile, interpret=cfg.interpret,
-            carry_dtype=jnp.dtype(cfg.carry_dtype))
+            carry_dtype=jnp.dtype(cfg.carry_dtype),
+            pipeline_depth=cfg.pipeline_depth)
     # Reverse-direction local scans (the adjoint pass) go through the XLA
     # fused-scan oracle — same recurrence, reversed row walk.
     return _ref.gspn_scan_ref(x, wl, wc, wr, lam, reverse=reverse)
@@ -354,7 +358,8 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
                  strategy: str = "auto", inner_impl: str = "auto",
                  row_tile: int | None = None, interpret: bool = True,
                  chunk: int | None = None, batch_axes=None,
-                 boundary_dtype=None, carry_dtype=None):
+                 boundary_dtype=None, carry_dtype=None,
+                 pipeline_depth: int | None = None):
     """Spatially-sharded GSPN line scan (``impl="sp"``).
 
     Same semantics and layout as :func:`repro.kernels.ops.gspn_scan` —
@@ -395,7 +400,8 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
         return gspn_scan(x, wl, wc, wr, lam, chunk=chunk, impl="auto",
                          row_tile=row_tile, interpret=interpret,
                          carry_dtype=(carry_dtype if carry_dtype is not None
-                                      else "float32"))
+                                      else "float32"),
+                         pipeline_depth=pipeline_depth)
 
     g, h_dim, w = x.shape
     gw = wl.shape[0]
@@ -418,7 +424,8 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
                        else jnp.float32)),
                    boundary_dtype=str(jnp.dtype(
                        boundary_dtype if boundary_dtype is not None
-                       else jnp.float32)))
+                       else jnp.float32)),
+                   pipeline_depth=pipeline_depth)
     if batch_axes is None:
         batch_axes = ("pod", "data")
     batch_axes = tuple(a for a in batch_axes

@@ -87,6 +87,103 @@ def test_tolerance_band_is_configurable():
 
 
 # ---------------------------------------------------------------------------
+# Dtype ordering check (DESIGN.md §12): bf16 pallas fwd must strictly
+# beat f32 at every ladder resolution, with messages naming the rung.
+# ---------------------------------------------------------------------------
+
+def _dtype_rows(f32_us, bf16_us, res="128x128"):
+    return [(f"dtype/f32/pallas/{res}/fwd", f32_us, ""),
+            (f"dtype/bf16/pallas/{res}/fwd", bf16_us, "")]
+
+
+def test_dtype_ordering_ok_when_bf16_faster():
+    payload = _payload(_dtype_rows(650.0, 600.0)
+                       + _dtype_rows(2600.0, 2400.0, res="256x256")
+                       + [("scan/fwd/128", 5000.0, "")])
+    assert gate.dtype_ordering_violations(payload) == []
+
+
+def test_dtype_ordering_violation_names_rung_and_dtype():
+    payload = _payload(_dtype_rows(650.0, 600.0)
+                       + _dtype_rows(2000.0, 9000.0, res="256x256"))
+    (v,) = gate.dtype_ordering_violations(payload)
+    assert "256x256" in v and "bf16" in v and "f32" in v
+    assert "9000.0us >= f32 2000.0us" in v
+    # a TIE is also a violation: the order must be STRICT
+    tie = _payload(_dtype_rows(500.0, 500.0))
+    assert len(gate.dtype_ordering_violations(tie)) == 1
+
+
+def test_dtype_ordering_skips_unpaired_rungs():
+    # xla rungs and resolutions missing one side never trip the check
+    payload = _payload([("dtype/f32/pallas/512x512/fwd", 100.0, ""),
+                        ("dtype/bf16/xla/128x128/fwd", 9e9, ""),
+                        ("dtype/f32/xla/128x128/fwd", 1.0, "")])
+    assert gate.dtype_ordering_violations(payload) == []
+
+
+def test_uniform_scaling_cannot_trip_ordering():
+    """The injected-2x CI self-test scales every rung uniformly; a
+    within-report comparison must be invariant to that."""
+    payload = _payload(_dtype_rows(650.0, 600.0))
+    scaled = json.loads(json.dumps(payload))
+    for row in scaled["rows"]:
+        row["us_per_call"] *= 2.0
+    assert gate.dtype_ordering_violations(scaled) == []
+
+
+def test_cli_fails_and_update_refuses_on_ordering_violation(tmp_path,
+                                                           capsys):
+    good = _payload(_dtype_rows(650.0, 600.0))
+    bad = _payload(_dtype_rows(600.0, 16000.0))
+    base = _write(tmp_path, "base.json", good)
+    cur = _write(tmp_path, "bad.json", bad)
+    # ratio band alone would pass (bf16 16000/600 has no baseline pair
+    # mismatch here — base vs bad bf16 regresses, so gate vs base fails
+    # anyway; the point is the ORDERING line names the rung + dtype)
+    assert gate.main(["--baseline", base, "--current", cur,
+                      "--tolerance", "1000"]) == 1
+    out = capsys.readouterr().out
+    assert "ORDERING" in out and "128x128" in out and "bf16" in out
+    # --update must refuse to enshrine a cliff report as the baseline
+    assert gate.main(["--baseline", base, "--current", cur,
+                      "--update"]) == 1
+    assert json.loads(pathlib.Path(base).read_text()) == good
+    # and a clean report still re-baselines
+    ok = _write(tmp_path, "ok.json", good)
+    assert gate.main(["--baseline", base, "--current", ok,
+                      "--update"]) == 0
+
+
+def test_smoke_dtype_ladder_bf16_beats_f32_per_rung(monkeypatch, capsys):
+    """Run the REAL smoke dtype ladder and assert bf16 pallas fwd is no
+    slower than f32 at every rung it emits (the ISSUE 6 acceptance,
+    checked through the same parser the gate uses)."""
+    import benchmarks.common as common
+    from benchmarks import dtype_ladder
+
+    monkeypatch.setattr(common, "SMOKE", True)
+    common.ROWS.clear()
+    dtype_ladder.run()
+    rows = [(n, us, d) for n, us, d in
+            (r.split(",", 2) for r in common.ROWS)]
+    payload = _payload([(n, float(us), d) for n, us, d in rows])
+    assert any(r["name"].startswith("dtype/bf16/pallas/")
+               for r in payload["rows"])
+    violations = gate.dtype_ordering_violations(payload)
+    assert violations == [], violations
+    # the pallas rungs carry the resolved plan in their derived field
+    for row in payload["rows"]:
+        if "/pallas/" in row["name"]:
+            assert "pipeline_depth=" in row["derived"], row
+    depths = {row["name"]: row["derived"] for row in payload["rows"]
+              if "/pallas/" in row["name"]}
+    for name, derived in depths.items():
+        want = "2" if "/bf16/" in name else "1"
+        assert f"pipeline_depth={want}" in derived, (name, derived)
+
+
+# ---------------------------------------------------------------------------
 # CLI behaviour (what CI actually invokes).
 # ---------------------------------------------------------------------------
 

@@ -49,10 +49,12 @@ class Conf:
     direction: str            # tb | bt | lr | rl | pair (vertical pair)
     channel_shared: bool
     impl: str                 # pallas | multidir | xla
+    pipeline_depth: int = 1   # 1 | 2 for the Pallas impls (DESIGN.md §12)
 
     def id(self) -> str:
         return (f"h{self.h}w{self.w}c{self.c}-{self.direction}-"
-                f"{self.impl}-{self.dtype}-cs{int(self.channel_shared)}")
+                f"{self.impl}-{self.dtype}-cs{int(self.channel_shared)}"
+                f"-d{self.pipeline_depth}")
 
 
 def _sample_configs(n: int = N_CONFIGS, seed: int = 0) -> list:
@@ -62,9 +64,10 @@ def _sample_configs(n: int = N_CONFIGS, seed: int = 0) -> list:
         direction = rng.choice(SINGLE_DIRS + ["pair", "pair"])
         impl = rng.choice(["multidir", "xla"] if direction == "pair"
                           else ["pallas", "pallas", "xla"])
+        depth = 1 if impl == "xla" else rng.choice([1, 2])
         cfg = Conf(rng.choice(HS), rng.choice(WS), rng.choice(CS),
                    rng.choice(DTYPES), direction,
-                   rng.choice([True, False]), impl)
+                   rng.choice([True, False]), impl, depth)
         if cfg not in seen:
             seen.add(cfg)
             cfgs.append(cfg)
@@ -122,7 +125,8 @@ def test_oracle_conformance_fwd_and_grad(cfg):
         dy2 = jnp.stack([dy, -dy])
 
         def impl_fn(x, wl2, wc2, wr2, lam2):
-            return gspn_scan_pair(x, wl2, wc2, wr2, lam2, impl=cfg.impl)
+            return gspn_scan_pair(x, wl2, wc2, wr2, lam2, impl=cfg.impl,
+                                  pipeline_depth=cfg.pipeline_depth)
 
         _check(impl_fn(x, wl2, wc2, wr2, lam2),
                _oracle_pair(x, wl2, wc2, wr2, lam2), "fwd", cfg.dtype)
@@ -139,7 +143,8 @@ def test_oracle_conformance_fwd_and_grad(cfg):
 
         def impl_fn(x, wl, wc, wr, lam):
             return G.directional_scan(x, wl, wc, wr, lam, cfg.direction,
-                                      impl=cfg.impl)
+                                      impl=cfg.impl,
+                                      pipeline_depth=cfg.pipeline_depth)
 
         _check(impl_fn(x, wl, wc, wr, lam),
                _oracle_single(x, wl, wc, wr, lam, cfg.direction),
@@ -185,24 +190,100 @@ def test_every_tuner_candidate_matches_oracle(cfg):
         cfg.impl, cfg.dtype, "float32", cfg.channel_shared)
     cands = autotune.enumerate_candidates(key)
     assert cands, key
-    tiles = sorted({c.row_tile for c in cands})
+    plans = sorted({(c.row_tile, c.pipeline_depth) for c in cands})
+    tiles = sorted({t for t, _ in plans})
     # The heuristic's choice is always in the candidate set — a measured
     # winner can therefore never be slower than the heuristic beyond
     # timing noise (the tuner times the heuristic tile too).
     assert autotune.heuristic_row_tile(key) in tiles
+    # Depth 2 is enumerated exactly for narrow streams (admission policy).
+    assert (2 in {d for _, d in plans}) == (key.stream_bytes < 4)
 
     if cfg.direction == "pair":
         x, wl2, wc2, wr2, lam_s, _ = _operands(cfg, seed, n_dirs=2)
         lam2 = jnp.stack([lam_s, lam_s])
         want = _oracle_pair(x, wl2, wc2, wr2, lam2)
-        for t in tiles:
+        for t, d in plans:
             got = gspn_scan_pair(x, wl2, wc2, wr2, lam2, impl=cfg.impl,
-                                 row_tile=t)
+                                 row_tile=t, pipeline_depth=d)
             _check(got, want, "fwd", cfg.dtype)
     else:
         x, wl, wc, wr, lam, _ = _operands(cfg, seed)
         want = _oracle_single(x, wl, wc, wr, lam, cfg.direction)
-        for t in tiles:
+        for t, d in plans:
             got = G.directional_scan(x, wl, wc, wr, lam, cfg.direction,
-                                     impl=cfg.impl, row_tile=t)
+                                     impl=cfg.impl, row_tile=t,
+                                     pipeline_depth=d)
             _check(got, want, "fwd", cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-depth bit agreement (DESIGN.md §12).
+#
+# Depth 1 (the revolving-buffer per-plane kernels) and depth 2 (the staged
+# plane-blocked pipeline) execute the SAME f32 operation sequence per
+# element — staging only changes where casts and copies happen, never the
+# arithmetic.  In interpret mode that makes the two depths bit-identical,
+# and this grid pins it: forward AND grad, all four directions, the fused
+# pair, the quad launch, bf16/f32 streams, bf16/f32 carries.
+# ---------------------------------------------------------------------------
+
+DEPTH_DIRS = SINGLE_DIRS + ["pair", "quad"]
+
+
+@pytest.mark.parametrize("carry_dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("direction", DEPTH_DIRS)
+def test_pipeline_depth_bit_agreement(direction, dtype, carry_dtype):
+    cfg = Conf(16, 16, 4, dtype, direction if direction != "quad" else "tb",
+               True, "pallas")
+    seed = 77 + DEPTH_DIRS.index(direction)
+
+    def bitwise(a, b):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+    if direction == "quad":
+        # Forward-only single-launch path; exercised directly.
+        from repro.kernels import gspn_multidir as MK
+        x, wl4, wc4, wr4, lam_s, _ = _operands(cfg, seed, n_dirs=4)
+        lam4 = jnp.stack([lam_s] * 4)
+        outs = [MK.gspn_scan_quad_pallas(
+                    x, {"wl": wl4, "wc": wc4, "wr": wr4}, lam4,
+                    channels_per_weight=cfg.c, row_tile=8,
+                    carry_dtype=carry_dtype, pipeline_depth=d)
+                for d in (1, 2)]
+        bitwise(*outs)
+        return
+
+    if direction == "pair":
+        x, wl2, wc2, wr2, lam_s, dy = _operands(cfg, seed, n_dirs=2)
+        lam2 = jnp.stack([lam_s, lam_s])
+        dy2 = jnp.stack([dy, -dy])
+
+        def run(depth, *a):
+            return gspn_scan_pair(*a, impl="multidir", row_tile=8,
+                                  carry_dtype=carry_dtype,
+                                  pipeline_depth=depth)
+
+        args = (x, wl2, wc2, wr2, lam2)
+        cot = dy2
+    else:
+        x, wl, wc, wr, lam, dy = _operands(cfg, seed)
+
+        def run(depth, *a):
+            return G.directional_scan(*a, cfg.direction, impl="pallas",
+                                      row_tile=8, carry_dtype=carry_dtype,
+                                      pipeline_depth=depth)
+
+        args = (x, wl, wc, wr, lam)
+        cot = dy
+
+    bitwise(run(1, *args), run(2, *args))
+    grads = [jax.grad(
+                 lambda *a, _d=d: jnp.sum(run(_d, *a).astype(jnp.float32)
+                                          * cot),
+                 argnums=tuple(range(5)))(*args)
+             for d in (1, 2)]
+    for g1, g2 in zip(*grads):
+        bitwise(g1, g2)

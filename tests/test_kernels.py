@@ -179,6 +179,46 @@ def test_bwd_row_tile_sees_streamed_dtype():
     assert t16 >= t32
 
 
+def test_depth2_staging_term_in_working_set():
+    """Depth-2 adds exactly one f32 staging copy per streamed tile
+    (DESIGN.md §12), independent of the stream dtype."""
+    t, w, n = 64, 128, 6
+    for b in (2, 4):
+        assert (tuning.scan_working_set(t, w, b, n, pipeline_depth=2)
+                == tuning.scan_working_set(t, w, b, n) + n * t * w * 4)
+    # bf16 depth-2 footprint lands exactly on the f32 depth-1 footprint
+    # (2·2 + 4 = 4·2 bytes per streamed element).
+    assert (tuning.scan_working_set(t, w, 2, n, pipeline_depth=2)
+            == tuning.scan_working_set(t, w, 4, n, pipeline_depth=1))
+
+
+def test_admitted_tile_bf16_never_below_f32():
+    """The narrow-dtype admission pin (ISSUE 6 satellite): at equal
+    shapes and budget, the tile the tuner admits for a bf16 stream is
+    never smaller than the f32 one — at depth 1 (halved streamed term)
+    AND at the depth the heuristic would actually run bf16 at (depth 2,
+    whose staging term brings it exactly back to the f32 footprint)."""
+    budget = 2 ** 21
+    for h, w in ((4096, 128), (1024, 64), (128, 128)):
+        t32 = tuning.pick_row_tile(h, w, 4, vmem_budget=budget).row_tile
+        for depth in (1, 2):
+            t16 = tuning.pick_row_tile(h, w, 2, vmem_budget=budget,
+                                       pipeline_depth=depth).row_tile
+            assert t16 >= t32, (h, w, depth, t16, t32)
+
+
+def test_depth2_halves_admissible_tile_same_dtype():
+    """At a tight budget the staging copies halve the admissible tile
+    RELATIVE TO THE SAME dtype at depth 1 — the §12 trade: smaller tile,
+    but bulk converts instead of per-row narrow-dtype stores."""
+    budget = 2 ** 21
+    t16_d1 = tuning.pick_row_tile(4096, 128, 2, vmem_budget=budget,
+                                  pipeline_depth=1).row_tile
+    t16_d2 = tuning.pick_row_tile(4096, 128, 2, vmem_budget=budget,
+                                  pipeline_depth=2).row_tile
+    assert t16_d2 == t16_d1 // 2
+
+
 def test_ref_vjp_helper_matches_autodiff():
     x, wl, wc, wr, lam = _make(4, 8, 12, 2, seed=7)
     dy = jax.random.normal(jax.random.PRNGKey(11), x.shape)
