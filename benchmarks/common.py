@@ -2,14 +2,21 @@
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import gspn as G
 
 ROWS = []
+
+# Per-row distribution stats, parallel to ROWS (schema-2 payloads,
+# DESIGN.md §13): ``time_fn`` records its iteration spread here via
+# LAST_STATS; ``emit`` consumes-and-clears it into ROW_STATS so each CSV
+# row carries the p10/p50/p90 of the timing run that produced it (None
+# for derived rows emitted without a fresh time_fn call).
+ROW_STATS = []
+LAST_STATS = None
 
 # Set by ``benchmarks.run --smoke``: every rung runs exactly one timed
 # iteration so a full bench sweep can gate a PR in seconds.  Timings are
@@ -18,9 +25,18 @@ SMOKE = False
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
+    global LAST_STATS
     line = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(line)
+    ROW_STATS.append(LAST_STATS)
+    LAST_STATS = None
     print(line, flush=True)
+
+
+def _percentile(sorted_times, q: float) -> float:
+    """Nearest-rank percentile of an already-sorted list."""
+    i = min(len(sorted_times) - 1, int(round(q * (len(sorted_times) - 1))))
+    return sorted_times[i]
 
 
 def time_fn(fn, *args, iters: int = 3, warmup: int = 1,
@@ -30,17 +46,26 @@ def time_fn(fn, *args, iters: int = 3, warmup: int = 1,
     ``min_iters`` floors the iteration count under --smoke: rungs whose
     RELATIVE timing is gated (the dtype-ordering check, DESIGN.md §12)
     ask for a few iterations even in smoke mode so a single scheduler
-    hiccup cannot flip the comparison."""
+    hiccup cannot flip the comparison.
+
+    Side effect: records the iteration spread (p10/p50/p90 µs) into
+    ``LAST_STATS`` for the next ``emit`` to attach to its row (schema-2
+    --json payloads)."""
+    global LAST_STATS
     if SMOKE:
         iters, warmup = max(1, min_iters), min(warmup, 1)
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
     for _ in range(iters):
-        t0 = time.perf_counter()
+        t0 = obs.monotonic()
         jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
+        times.append(obs.monotonic() - t0)
     times.sort()
+    LAST_STATS = {"iters": len(times),
+                  "p10_us": round(_percentile(times, 0.1) * 1e6, 3),
+                  "p50_us": round(_percentile(times, 0.5) * 1e6, 3),
+                  "p90_us": round(_percentile(times, 0.9) * 1e6, 3)}
     return times[len(times) // 2]
 
 

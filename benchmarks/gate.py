@@ -61,13 +61,19 @@ class GateResult:
         return not self.regressions
 
 
+# Report schemas this gate can read.  Schema 2 added an optional per-row
+# ``stats`` dict (p10/p50/p90 µs); the comparison only consumes
+# name/us_per_call, so schema-1 baselines gate schema-2 reports unchanged.
+SUPPORTED_SCHEMAS = (1, 2)
+
+
 def load_report(path) -> dict:
     """Read and validate one --json report (schema + row shape)."""
     payload = json.loads(pathlib.Path(path).read_text())
     if not isinstance(payload, dict) or "rows" not in payload:
         raise ValueError(f"{path}: not a benchmarks.run --json report")
     schema = payload.get("schema", 1)
-    if schema != 1:
+    if schema not in SUPPORTED_SCHEMAS:
         raise ValueError(f"{path}: unsupported report schema {schema!r}")
     for row in payload["rows"]:
         if "name" not in row or "us_per_call" not in row:

@@ -18,8 +18,11 @@ import sys
 import traceback
 
 # --json payload schema version; benchmarks/gate.py validates it before
-# comparing runs, so bump it when the row shape changes.
-JSON_SCHEMA = 1
+# comparing runs, so bump it when the row shape changes.  Schema 2 adds
+# an optional per-row ``stats`` dict (p10/p50/p90 µs of the timing run —
+# DESIGN.md §13); the gate reads schema 1 and 2 (a schema-1 row is a
+# schema-2 row with stats=None).
+JSON_SCHEMA = 2
 
 MODULES = [
     ("fig3", "benchmarks.fig3_kernel_ladder"),
@@ -35,15 +38,20 @@ MODULES = [
 ]
 
 
-def build_payload(rows, *, smoke: bool, only=None, failed=()) -> dict:
+def build_payload(rows, *, smoke: bool, only=None, failed=(),
+                  row_stats=None) -> dict:
     """The --json artifact: parsed CSV rows + run metadata.  One function
     builds it (and the gate's loader validates it) so the schema cannot
-    drift between writer and reader."""
+    drift between writer and reader.  ``row_stats`` (parallel to rows)
+    carries each row's p10/p50/p90 timing spread; missing/short lists
+    pad with None."""
+    row_stats = list(row_stats or [])
     parsed = []
-    for line in rows:
+    for i, line in enumerate(rows):
         name, us, derived = line.split(",", 2)
         parsed.append({"name": name, "us_per_call": float(us),
-                       "derived": derived})
+                       "derived": derived,
+                       "stats": row_stats[i] if i < len(row_stats) else None})
     return {"schema": JSON_SCHEMA, "smoke": smoke,
             "only": sorted(only or []), "failed": list(failed),
             "rows": parsed}
@@ -56,11 +64,21 @@ def main() -> None:
                     help="1 timed iteration per rung (CI smoke gate)")
     ap.add_argument("--json", default="",
                     help="also write rows to this JSON file (CI artifact)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the sweep "
+                         "(per-module bench.<key> spans + kernel-launch "
+                         "spans; DESIGN.md §13)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics-registry snapshot here "
+                         "(.prom => Prometheus text, else JSON)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    from repro import obs
     import benchmarks.common as common
     if args.smoke:
         common.SMOKE = True
+    if args.trace_out:
+        obs.enable()
 
     print("name,us_per_call,derived")
     failed = []
@@ -70,17 +88,24 @@ def main() -> None:
         try:
             import importlib
             mod = importlib.import_module(modname)
-            mod.run()
+            with obs.trace(f"bench.{key}", module=modname):
+                mod.run()
         except Exception:  # noqa: BLE001
             failed.append(key)
             traceback.print_exc()
 
     if args.json:
         payload = build_payload(common.ROWS, smoke=args.smoke, only=only,
-                                failed=failed)
+                                failed=failed, row_stats=common.ROW_STATS)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"[run] wrote {len(payload['rows'])} rows to {args.json}",
+              file=sys.stderr)
+    if args.trace_out:
+        print(f"[run] trace: {obs.save_chrome_trace(args.trace_out)} "
+              f"({len(obs.records())} events)", file=sys.stderr)
+    if args.metrics_out:
+        print(f"[run] metrics: {obs.save_metrics(args.metrics_out)}",
               file=sys.stderr)
 
     if failed:

@@ -86,6 +86,7 @@ def run():
                 f"tok_s={total/dt:.1f} p50_ttft_ms={ttfts[len(ttfts)//2]*1e3:.2f} "
                 f"max_ttft_ms={ttfts[-1]*1e3:.2f} "
                 f"itl_ms={1e3*sum(itls)/max(len(itls),1):.2f} "
+                f"qdepth_mean={eng.metrics['queue_depth_mean']:.1f} "
                 f"qdepth_max={eng.metrics['queue_depth_max']} "
                 f"chunks={eng.metrics['prefill_chunks']}")
             eng.reset()

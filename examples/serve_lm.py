@@ -82,7 +82,7 @@ def main():
     m = eng.metrics
     print(f"ttft p50 {ttfts[len(ttfts)//2]*1e3:.1f} ms / "
           f"max {ttfts[-1]*1e3:.1f} ms; queue depth "
-          f"mean {m['queue_depth_sum']/max(m['depth_samples'], 1):.1f} / "
+          f"mean {m['queue_depth_mean']:.1f} / "
           f"max {m['queue_depth_max']}")
     for uid in sorted(results)[:6]:
         r = results[uid]

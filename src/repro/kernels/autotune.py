@@ -41,11 +41,11 @@ import json
 import os
 import pathlib
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import tuning
 
 ENV_CACHE_PATH = "GSPN_TUNE_CACHE"
@@ -79,8 +79,42 @@ _CARRY_ROWS = {"fwd": 1, "bwd": 3, "pair_fwd": 1, "pair_bwd": 3, "quad": 1}
 PIPELINE_DEPTHS = (1, 2)
 
 # Injectable timer — tests monkeypatch this (or pass ``timer=``) to make
-# the measurement harness deterministic.
-_default_timer = time.perf_counter
+# the measurement harness deterministic.  The default is the repo-wide
+# monotonic span clock (DESIGN.md §13) — never wall clock.
+_default_timer = obs.monotonic
+
+# Every (key -> plan) resolution this process has made, bounded.  The
+# serve engine annotates its decode-step spans with this (DESIGN.md §13)
+# so a trace shows exactly which kernel configuration ran.
+_RESOLVED_CAP = 256
+_RESOLVED: dict[str, tuple[int, int, str]] = {}
+
+
+def _record_plan(key: "ScanKey", plan: "ScanPlan", source: str):
+    if key.encode() not in _RESOLVED and len(_RESOLVED) >= _RESOLVED_CAP:
+        return
+    prev = _RESOLVED.get(key.encode())
+    _RESOLVED[key.encode()] = (plan.row_tile, plan.pipeline_depth, source)
+    if prev is None:
+        obs.event("kernel.plan", key=key.encode(), row_tile=plan.row_tile,
+                  pipeline_depth=plan.pipeline_depth, source=source)
+
+
+def resolved_plans() -> dict:
+    """``key.encode() -> (row_tile, pipeline_depth, source)`` for every
+    launch-site resolution so far."""
+    return dict(_RESOLVED)
+
+
+def plans_summary() -> str:
+    """Compact one-line view: ``dir@hHxwW/dtype:tT-dD`` per resolved key
+    (the decode-step span annotation)."""
+    parts = []
+    for enc, (t, d, _src) in sorted(_RESOLVED.items()):
+        seg = enc.split("|")
+        label = "|".join(seg[1:5]) if len(seg) >= 5 else enc
+        parts.append(f"{label}:t{t}-d{d}")
+    return " ".join(parts)
 
 
 @functools.lru_cache(maxsize=4)
@@ -350,17 +384,23 @@ def plan_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
     if row_tile is not None:
         depth = (heuristic_pipeline_depth(key) if pipeline_depth is None
                  else pipeline_depth)
-        return ScanPlan(row_tile, depth)
+        plan = ScanPlan(row_tile, depth)
+        _record_plan(key, plan, "explicit")
+        return plan
     cache = cache if cache is not None else get_cache()
     entry = cache.lookup(key)
     if entry is not None and _entry_valid(key, entry):
         t, depth = int(entry["row_tile"]), _entry_depth(entry)
+        source = "cache"
     else:
         depth = heuristic_pipeline_depth(key)
         t = heuristic_row_tile(key, cap=cap, pipeline_depth=depth)
+        source = "heuristic"
     if pipeline_depth is not None:
         depth = pipeline_depth
-    return ScanPlan(t, depth)
+    plan = ScanPlan(t, depth)
+    _record_plan(key, plan, source)
+    return plan
 
 
 def row_tile_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
@@ -494,10 +534,20 @@ def autotune_key(key: ScanKey, *, candidates=None, iters: int = 3,
         runner_factory = default_runner_factory(key, interpret=interpret)
 
     timed: list[tuple[float, Candidate]] = []
-    for cand in cands:
-        fn = runner_factory(cand)
-        us = measure(fn, iters=iters, warmup=warmup, timer=timer) * 1e6
-        timed.append((us, cand))
+    with obs.trace("autotune.key", key=key.encode(),
+                   n_candidates=len(cands)):
+        for cand in cands:
+            fn = runner_factory(cand)
+            with obs.trace("autotune.measure", row_tile=cand.row_tile,
+                           pipeline_depth=cand.pipeline_depth):
+                us = measure(fn, iters=iters, warmup=warmup,
+                             timer=timer) * 1e6
+            obs.event("autotune.candidate", key=key.encode(),
+                      row_tile=cand.row_tile,
+                      pipeline_depth=cand.pipeline_depth, us=round(us, 3))
+            timed.append((us, cand))
+    obs.counter("autotune_keys_measured_total").inc()
+    obs.counter("autotune_candidates_timed_total").inc(len(timed))
     best_us, best = min(timed, key=lambda r: r[0])
     entry = {
         "row_tile": best.row_tile,

@@ -42,10 +42,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.kernels import autotune
 from repro.kernels.gspn_scan import (CompilerParams, _dir_scan, _masked_shifts,
                                      _row, _shift_left, _shift_right,
                                      _stage_rows)
+
+
+def _launch_span(name, plan, dtype, g, h, w):
+    """Traced-launch span for the fused kernels (DESIGN.md §13): fires
+    once per jit trace, annotated with the tuner-resolved plan."""
+    return obs.trace("kernel.launch", kernel=name, row_tile=plan.row_tile,
+                     pipeline_depth=plan.pipeline_depth,
+                     dtype=str(jnp.dtype(dtype)), g=g, h=h, w=w)
 
 
 def _pair_plan(h: int, w: int, c: int, direction: str, dtype,
@@ -182,7 +191,7 @@ def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
                     wl_ref.at[0], wc_ref.at[0], wr_ref.at[0], lam_ref.at[0],
                     o_ref.at[0], carry_ref)
 
-        return pl.pallas_call(
+        call = pl.pallas_call(
             kernel,
             grid=(2, g, n_tiles),
             in_specs=[x_spec, wt_spec, wt_spec, wt_spec, lam_spec],
@@ -192,7 +201,9 @@ def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
             compiler_params=CompilerParams(
                 dimension_semantics=("arbitrary",) * 3),
             interpret=interpret,
-        )(x, taps["wl"], taps["wc"], taps["wr"], lam2)
+        )
+        with _launch_span("gspn_pair_fwd", plan, x.dtype, g, h, w):
+            return call(x, taps["wl"], taps["wc"], taps["wr"], lam2)
 
     x_spec = pl.BlockSpec((g, row_tile, w),
                           lambda d, ti: (0, ti_eff(d, ti), 0))
@@ -208,7 +219,7 @@ def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
                        wl_ref.at[0], wc_ref.at[0], wr_ref.at[0],
                        lam_ref.at[0], o_ref.at[0], carry_ref)
 
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid=(2, n_tiles),
         in_specs=[x_spec, wt_spec, wt_spec, wt_spec, lam_spec],
@@ -218,7 +229,9 @@ def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",) * 2),
         interpret=interpret,
-    )(x, taps["wl"], taps["wc"], taps["wr"], lam2)
+    )
+    with _launch_span("gspn_pair_fwd", plan, x.dtype, g, h, w):
+        return call(x, taps["wl"], taps["wc"], taps["wr"], lam2)
 
 
 # ---------------------------------------------------------------------------
@@ -341,7 +354,7 @@ def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
                              wl_ref.at[0], wc_ref.at[0], wr_ref.at[0],
                              g_ref.at[0], carry_ref)
 
-        return pl.pallas_call(
+        call = pl.pallas_call(
             kernel,
             grid=(2, g_dim, n_tiles),
             in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
@@ -351,7 +364,9 @@ def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
             compiler_params=CompilerParams(
                 dimension_semantics=("arbitrary",) * 3),
             interpret=interpret,
-        )(dy2, wl2, wc2, wr2)
+        )
+        with _launch_span("gspn_pair_bwd", plan, dy2.dtype, g_dim, h, w):
+            return call(dy2, wl2, wc2, wr2)
 
     wt_spec = pl.BlockSpec((1, gw, row_tile, w),
                            lambda d, ti: (d, 0, ti_eff(d, ti), 0))
@@ -363,7 +378,7 @@ def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
                                 wl_ref.at[0], wc_ref.at[0], wr_ref.at[0],
                                 g_ref.at[0], carry_ref)
 
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid=(2, n_tiles),
         in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
@@ -373,7 +388,9 @@ def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",) * 2),
         interpret=interpret,
-    )(dy2, wl2, wc2, wr2)
+    )
+    with _launch_span("gspn_pair_bwd", plan, dy2.dtype, g_dim, h, w):
+        return call(dy2, wl2, wc2, wr2)
 
 
 # ---------------------------------------------------------------------------
@@ -434,7 +451,7 @@ def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
                     wl_ref.at[0], wc_ref.at[0], wr_ref.at[0], lam_ref.at[0],
                     o_ref.at[0], carry_ref)
 
-        return pl.pallas_call(
+        call = pl.pallas_call(
             kernel,
             grid=(4, g, n_tiles),
             in_specs=[xx_spec, wt_spec, wt_spec, wt_spec, lam_spec],
@@ -444,7 +461,9 @@ def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
             compiler_params=CompilerParams(
                 dimension_semantics=("arbitrary",) * 3),
             interpret=interpret,
-        )(xx, taps4["wl"], taps4["wc"], taps4["wr"], lam4)
+        )
+        with _launch_span("gspn_quad_fwd", plan, x.dtype, g, h, w):
+            return call(xx, taps4["wl"], taps4["wc"], taps4["wr"], lam4)
 
     xx_spec = pl.BlockSpec((1, g, row_tile, w),
                            lambda d, ti: (d // 2, 0, ti_eff(d, ti), 0))
@@ -460,7 +479,7 @@ def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
                        wl_ref.at[0], wc_ref.at[0], wr_ref.at[0],
                        lam_ref.at[0], o_ref.at[0], carry_ref)
 
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid=(4, n_tiles),
         in_specs=[xx_spec, wt_spec, wt_spec, wt_spec, lam_spec],
@@ -470,4 +489,6 @@ def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",) * 2),
         interpret=interpret,
-    )(xx, taps4["wl"], taps4["wc"], taps4["wr"], lam4)
+    )
+    with _launch_span("gspn_quad_fwd", plan, x.dtype, g, h, w):
+        return call(xx, taps4["wl"], taps4["wc"], taps4["wr"], lam4)

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.kernels import autotune, tuning
 
 # jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x; accept
@@ -252,37 +253,43 @@ def gspn_scan_fwd_pallas(x, wl, wc, wr, lam, *, channels_per_weight: int = 1,
     assert pipeline_depth in (1, 2), pipeline_depth
     chunk_tiles = chunk // row_tile
 
-    if pipeline_depth == 1:
-        data_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi, ti, 0))
-        wt_spec = pl.BlockSpec((1, row_tile, w),
-                               lambda gi, ti: (gi // cpw, ti, 0))
+    # Traced-launch span (DESIGN.md §13): fires once per jit trace of this
+    # launch site, annotated with the tuner-resolved plan.
+    with obs.trace("kernel.launch", kernel="gspn_scan_fwd",
+                   row_tile=row_tile, pipeline_depth=pipeline_depth,
+                   dtype=str(jnp.dtype(x.dtype)), g=g, h=h, w=w):
+        if pipeline_depth == 1:
+            data_spec = pl.BlockSpec((1, row_tile, w),
+                                     lambda gi, ti: (gi, ti, 0))
+            wt_spec = pl.BlockSpec((1, row_tile, w),
+                                   lambda gi, ti: (gi // cpw, ti, 0))
+            return pl.pallas_call(
+                functools.partial(_fwd_kernel, row_tile, chunk_tiles),
+                grid=(g, h // row_tile),
+                in_specs=[data_spec, wt_spec, wt_spec, wt_spec, data_spec],
+                out_specs=data_spec,
+                out_shape=jax.ShapeDtypeStruct((g, h, w), x.dtype),
+                scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
+                compiler_params=CompilerParams(
+                    dimension_semantics=("arbitrary", "arbitrary"),
+                ),
+                interpret=interpret,
+            )(x, wl, wc, wr, lam)
+
+        data_spec = pl.BlockSpec((g, row_tile, w), lambda ti: (0, ti, 0))
+        wt_spec = pl.BlockSpec((gw, row_tile, w), lambda ti: (0, ti, 0))
         return pl.pallas_call(
-            functools.partial(_fwd_kernel, row_tile, chunk_tiles),
-            grid=(g, h // row_tile),
+            functools.partial(_fwd_kernel_staged, row_tile, chunk_tiles, cpw),
+            grid=(h // row_tile,),
             in_specs=[data_spec, wt_spec, wt_spec, wt_spec, data_spec],
             out_specs=data_spec,
             out_shape=jax.ShapeDtypeStruct((g, h, w), x.dtype),
-            scratch_shapes=[pltpu.VMEM((1, w), carry_dtype)],
+            scratch_shapes=[pltpu.VMEM((g, 1, w), carry_dtype)],
             compiler_params=CompilerParams(
-                dimension_semantics=("arbitrary", "arbitrary"),
+                dimension_semantics=("arbitrary",),
             ),
             interpret=interpret,
         )(x, wl, wc, wr, lam)
-
-    data_spec = pl.BlockSpec((g, row_tile, w), lambda ti: (0, ti, 0))
-    wt_spec = pl.BlockSpec((gw, row_tile, w), lambda ti: (0, ti, 0))
-    return pl.pallas_call(
-        functools.partial(_fwd_kernel_staged, row_tile, chunk_tiles, cpw),
-        grid=(h // row_tile,),
-        in_specs=[data_spec, wt_spec, wt_spec, wt_spec, data_spec],
-        out_specs=data_spec,
-        out_shape=jax.ShapeDtypeStruct((g, h, w), x.dtype),
-        scratch_shapes=[pltpu.VMEM((g, 1, w), carry_dtype)],
-        compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
-        interpret=interpret,
-    )(x, wl, wc, wr, lam)
 
 
 # ---------------------------------------------------------------------------
@@ -391,35 +398,41 @@ def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, channels_per_weight: int = 1,
     wc_f = jnp.flip(wc, axis=1)
     wr_f = jnp.flip(wr, axis=1)
 
-    if pipeline_depth == 1:
-        data_spec = pl.BlockSpec((1, row_tile, w), lambda gi, ti: (gi, ti, 0))
-        wt_spec = pl.BlockSpec((1, row_tile, w),
-                               lambda gi, ti: (gi // cpw, ti, 0))
-        g_f = pl.pallas_call(
-            functools.partial(_bwd_kernel, row_tile, chunk_tiles),
-            grid=(g_dim, h // row_tile),
-            in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
-            out_specs=data_spec,
-            out_shape=jax.ShapeDtypeStruct((g_dim, h, w), jnp.float32),
-            scratch_shapes=[pltpu.VMEM((3, 1, w), jnp.float32)],
-            compiler_params=CompilerParams(
-                dimension_semantics=("arbitrary", "arbitrary"),
-            ),
-            interpret=interpret,
-        )(dy_f, wl_f, wc_f, wr_f)
-    else:
-        data_spec = pl.BlockSpec((g_dim, row_tile, w), lambda ti: (0, ti, 0))
-        wt_spec = pl.BlockSpec((gw, row_tile, w), lambda ti: (0, ti, 0))
-        g_f = pl.pallas_call(
-            functools.partial(_bwd_kernel_staged, row_tile, chunk_tiles, cpw),
-            grid=(h // row_tile,),
-            in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
-            out_specs=data_spec,
-            out_shape=jax.ShapeDtypeStruct((g_dim, h, w), jnp.float32),
-            scratch_shapes=[pltpu.VMEM((3, g_dim, 1, w), jnp.float32)],
-            compiler_params=CompilerParams(
-                dimension_semantics=("arbitrary",),
-            ),
-            interpret=interpret,
-        )(dy_f, wl_f, wc_f, wr_f)
+    with obs.trace("kernel.launch", kernel="gspn_scan_bwd",
+                   row_tile=row_tile, pipeline_depth=pipeline_depth,
+                   dtype=str(jnp.dtype(dy.dtype)), g=g_dim, h=h, w=w):
+        if pipeline_depth == 1:
+            data_spec = pl.BlockSpec((1, row_tile, w),
+                                     lambda gi, ti: (gi, ti, 0))
+            wt_spec = pl.BlockSpec((1, row_tile, w),
+                                   lambda gi, ti: (gi // cpw, ti, 0))
+            g_f = pl.pallas_call(
+                functools.partial(_bwd_kernel, row_tile, chunk_tiles),
+                grid=(g_dim, h // row_tile),
+                in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
+                out_specs=data_spec,
+                out_shape=jax.ShapeDtypeStruct((g_dim, h, w), jnp.float32),
+                scratch_shapes=[pltpu.VMEM((3, 1, w), jnp.float32)],
+                compiler_params=CompilerParams(
+                    dimension_semantics=("arbitrary", "arbitrary"),
+                ),
+                interpret=interpret,
+            )(dy_f, wl_f, wc_f, wr_f)
+        else:
+            data_spec = pl.BlockSpec((g_dim, row_tile, w),
+                                     lambda ti: (0, ti, 0))
+            wt_spec = pl.BlockSpec((gw, row_tile, w), lambda ti: (0, ti, 0))
+            g_f = pl.pallas_call(
+                functools.partial(_bwd_kernel_staged, row_tile, chunk_tiles,
+                                  cpw),
+                grid=(h // row_tile,),
+                in_specs=[data_spec, wt_spec, wt_spec, wt_spec],
+                out_specs=data_spec,
+                out_shape=jax.ShapeDtypeStruct((g_dim, h, w), jnp.float32),
+                scratch_shapes=[pltpu.VMEM((3, g_dim, 1, w), jnp.float32)],
+                compiler_params=CompilerParams(
+                    dimension_semantics=("arbitrary",),
+                ),
+                interpret=interpret,
+            )(dy_f, wl_f, wc_f, wr_f)
     return jnp.flip(g_f, axis=1)

@@ -40,6 +40,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import gspn_multidir as _mk
 from repro.kernels import gspn_scan as _pk
 from repro.kernels import ref as _ref
@@ -87,17 +88,20 @@ def _resolve_pair_impl(impl: str) -> str:
 
 def _fwd_dispatch(cfg: ScanConfig, x, wl, wc, wr, lam):
     impl = _resolve_impl(cfg.impl)
-    if impl == "pallas":
-        return _pk.gspn_scan_fwd_pallas(
-            x, wl, wc, wr, lam,
-            channels_per_weight=cfg.channels_per_weight,
-            row_tile=cfg.row_tile, interpret=cfg.interpret,
-            carry_dtype=jnp.dtype(cfg.carry_dtype),
-            pipeline_depth=cfg.pipeline_depth)
-    if impl == "xla":
-        return _ref.gspn_scan_ref(x, wl, wc, wr, lam)
-    if impl == "per_step":
-        return _ref.gspn_scan_per_step(x, wl, wc, wr, lam)
+    # Traced-dispatch span (DESIGN.md §13): fires once per jit trace.
+    with obs.trace("kernel.dispatch", op="gspn_scan", impl=impl,
+                   dtype=str(jnp.dtype(x.dtype)), shape=str(x.shape)):
+        if impl == "pallas":
+            return _pk.gspn_scan_fwd_pallas(
+                x, wl, wc, wr, lam,
+                channels_per_weight=cfg.channels_per_weight,
+                row_tile=cfg.row_tile, interpret=cfg.interpret,
+                carry_dtype=jnp.dtype(cfg.carry_dtype),
+                pipeline_depth=cfg.pipeline_depth)
+        if impl == "xla":
+            return _ref.gspn_scan_ref(x, wl, wc, wr, lam)
+        if impl == "per_step":
+            return _ref.gspn_scan_per_step(x, wl, wc, wr, lam)
     raise ValueError(f"unknown impl {impl!r}")
 
 
@@ -140,16 +144,18 @@ def _gspn_core_bwd(cfg, res, dy):
     cpw = cfg.channels_per_weight
     impl = _resolve_impl(cfg.impl)
 
-    if impl == "pallas":
-        g = _pk.gspn_scan_bwd_pallas(
-            dy, wl, wc, wr, channels_per_weight=cpw,
-            row_tile=cfg.row_tile, interpret=cfg.interpret,
-            pipeline_depth=cfg.pipeline_depth)
-    else:
-        wl_b = _ref._broadcast_w(wl, g_dim)
-        wc_b = _ref._broadcast_w(wc, g_dim)
-        wr_b = _ref._broadcast_w(wr, g_dim)
-        g = _bwd_adjoint_xla(dy, wl_b, wc_b, wr_b)
+    with obs.trace("kernel.dispatch", op="gspn_scan_bwd", impl=impl,
+                   dtype=str(jnp.dtype(dy.dtype)), shape=str(dy.shape)):
+        if impl == "pallas":
+            g = _pk.gspn_scan_bwd_pallas(
+                dy, wl, wc, wr, channels_per_weight=cpw,
+                row_tile=cfg.row_tile, interpret=cfg.interpret,
+                pipeline_depth=cfg.pipeline_depth)
+        else:
+            wl_b = _ref._broadcast_w(wl, g_dim)
+            wc_b = _ref._broadcast_w(wc, g_dim)
+            wr_b = _ref._broadcast_w(wr, g_dim)
+            g = _bwd_adjoint_xla(dy, wl_b, wc_b, wr_b)
 
     g = g.astype(jnp.float32)
     h32 = h.astype(jnp.float32)
@@ -239,17 +245,19 @@ def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
 
 def _pair_fwd_dispatch(cfg: ScanConfig, x, wl2, wc2, wr2, lam2):
     impl = _resolve_pair_impl(cfg.impl)
-    if impl == "multidir":
-        return _mk.gspn_scan_bidir_pallas(
-            x, {"wl": wl2, "wc": wc2, "wr": wr2}, lam2,
-            channels_per_weight=cfg.channels_per_weight,
-            row_tile=cfg.row_tile, interpret=cfg.interpret,
-            carry_dtype=jnp.dtype(cfg.carry_dtype),
-            pipeline_depth=cfg.pipeline_depth)
-    fwd = _ref.gspn_scan_ref(x, wl2[0], wc2[0], wr2[0], lam2[0])
-    rev = _ref.gspn_scan_ref(x, wl2[1], wc2[1], wr2[1], lam2[1],
-                             reverse=True)
-    return jnp.stack([fwd, rev])
+    with obs.trace("kernel.dispatch", op="gspn_scan_pair", impl=impl,
+                   dtype=str(jnp.dtype(x.dtype)), shape=str(x.shape)):
+        if impl == "multidir":
+            return _mk.gspn_scan_bidir_pallas(
+                x, {"wl": wl2, "wc": wc2, "wr": wr2}, lam2,
+                channels_per_weight=cfg.channels_per_weight,
+                row_tile=cfg.row_tile, interpret=cfg.interpret,
+                carry_dtype=jnp.dtype(cfg.carry_dtype),
+                pipeline_depth=cfg.pipeline_depth)
+        fwd = _ref.gspn_scan_ref(x, wl2[0], wc2[0], wr2[0], lam2[0])
+        rev = _ref.gspn_scan_ref(x, wl2[1], wc2[1], wr2[1], lam2[1],
+                                 reverse=True)
+        return jnp.stack([fwd, rev])
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -268,20 +276,22 @@ def _gspn_pair_bwd(cfg, res, dy2):
     cpw = cfg.channels_per_weight
     impl = _resolve_pair_impl(cfg.impl)
 
-    if impl == "multidir":
-        g2 = _mk.gspn_scan_bidir_bwd_pallas(
-            dy2, wl2, wc2, wr2, channels_per_weight=cpw,
-            row_tile=cfg.row_tile, interpret=cfg.interpret,
-            pipeline_depth=cfg.pipeline_depth)
-    else:
-        gs = []
-        for d, reverse in ((0, True), (1, False)):
-            wl_b = _ref._broadcast_w(wl2[d], g_dim)
-            wc_b = _ref._broadcast_w(wc2[d], g_dim)
-            wr_b = _ref._broadcast_w(wr2[d], g_dim)
-            gs.append(_bwd_adjoint_xla(dy2[d], wl_b, wc_b, wr_b,
-                                       reverse=reverse))
-        g2 = jnp.stack(gs)
+    with obs.trace("kernel.dispatch", op="gspn_scan_pair_bwd", impl=impl,
+                   dtype=str(jnp.dtype(dy2.dtype)), shape=str(dy2.shape)):
+        if impl == "multidir":
+            g2 = _mk.gspn_scan_bidir_bwd_pallas(
+                dy2, wl2, wc2, wr2, channels_per_weight=cpw,
+                row_tile=cfg.row_tile, interpret=cfg.interpret,
+                pipeline_depth=cfg.pipeline_depth)
+        else:
+            gs = []
+            for d, reverse in ((0, True), (1, False)):
+                wl_b = _ref._broadcast_w(wl2[d], g_dim)
+                wc_b = _ref._broadcast_w(wc2[d], g_dim)
+                wr_b = _ref._broadcast_w(wr2[d], g_dim)
+                gs.append(_bwd_adjoint_xla(dy2[d], wl_b, wc_b, wr_b,
+                                           reverse=reverse))
+            g2 = jnp.stack(gs)
 
     g2 = g2.astype(jnp.float32)
     h32 = h2.astype(jnp.float32)

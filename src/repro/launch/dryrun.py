@@ -63,7 +63,7 @@ def run_cell(kind: str, arch: str, shape: str, mesh_mode: str, out_dir: str,
         "tag": tag,
         "status": "unknown",
     }
-    t0 = time.time()
+    t0 = time.perf_counter()    # monotonic: these are durations
     try:
         with compat.set_mesh(mesh):
             if kind == "vision":
@@ -76,9 +76,9 @@ def run_cell(kind: str, arch: str, shape: str, mesh_mode: str, out_dir: str,
             result["meta"] = cell.meta
             jitted = jax.jit(cell.fn, **cell.jit_kwargs)
             lowered = jitted.lower(*cell.args)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
 
             mem = compiled.memory_analysis()
             print(mem)                       # proves it fits (or not)

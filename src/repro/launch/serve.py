@@ -19,11 +19,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import (PRECISIONS, get_arch, resolve_dtype,
                                 with_precision)
@@ -64,7 +64,20 @@ def main():
                          "GSPN launch in the engine then uses measured "
                          "row tiles instead of the VMEM heuristic")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run here "
+                         "(open in Perfetto / chrome://tracing; "
+                         "DESIGN.md §13)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics-registry snapshot here "
+                         "(.prom => Prometheus text, else JSON; "
+                         "DESIGN.md §13)")
     args = ap.parse_args()
+
+    if args.trace_out:
+        # Enable BEFORE model build so jit-trace-time spans (kernel
+        # dispatch/launch, autotune plan resolution) are captured.
+        obs.enable()
 
     if args.tune_cache:
         from repro.kernels.autotune import load_cache
@@ -118,9 +131,14 @@ def main():
         eng.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab, max(plen, 4)),
             max_new_tokens=args.max_new))
-    t0 = time.perf_counter()
+    t0 = obs.monotonic()
     results = eng.run()
-    dt = time.perf_counter() - t0
+    dt = obs.monotonic() - t0
+    if args.trace_out:
+        print(f"[serve] trace: {obs.save_chrome_trace(args.trace_out)} "
+              f"({len(obs.records())} events)")
+    if args.metrics_out:
+        print(f"[serve] metrics: {obs.save_metrics(args.metrics_out)}")
     if not results:
         print(f"[serve] {args.arch}: 0 requests")
         return
@@ -131,7 +149,7 @@ def main():
           f"{total/dt:.1f} tok/s")
     print(f"[serve] ttft p50 {ttfts[len(ttfts)//2]*1e3:.1f} ms, "
           f"max {ttfts[-1]*1e3:.1f} ms; queue depth "
-          f"mean {m['queue_depth_sum']/max(m['depth_samples'], 1):.1f} / "
+          f"mean {m['queue_depth_mean']:.1f} / "
           f"max {m['queue_depth_max']}; "
           f"{m['prefill_chunks']} prefill chunks / "
           f"{m['decode_steps']} decode steps over {m['ticks']} ticks")

@@ -17,6 +17,7 @@ import logging
 
 import jax
 
+from repro import obs
 from repro.configs.base import PRECISIONS, get_arch, with_precision
 from repro.data.pipeline import DataConfig
 from repro.launch.mesh import (dp_axes_for, make_mesh_for_devices,
@@ -55,8 +56,21 @@ def main():
                          "layered over the checked-in seed cache; fwd/bwd "
                          "GSPN launches in the train step then use "
                          "measured row tiles instead of the VMEM heuristic")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run here "
+                         "(open in Perfetto / chrome://tracing; "
+                         "DESIGN.md §13)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics-registry snapshot here "
+                         "(.prom => Prometheus text, else JSON; "
+                         "DESIGN.md §13)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+
+    if args.trace_out:
+        # Enable BEFORE setup so jit-trace-time spans (kernel dispatch /
+        # launch, autotune plan resolution) are captured.
+        obs.enable()
 
     if args.tune_cache:
         from repro.kernels.autotune import load_cache
@@ -105,6 +119,11 @@ def main():
         **mp_kwargs)
     trainer.init_or_restore()
     hist = trainer.run(args.steps)
+    if args.trace_out:
+        print(f"[train] trace: {obs.save_chrome_trace(args.trace_out)} "
+              f"({len(obs.records())} events)")
+    if args.metrics_out:
+        print(f"[train] metrics: {obs.save_metrics(args.metrics_out)}")
     print(f"[train] {args.arch}: loss {hist[0]:.4f} -> {hist[-1]:.4f}, "
           f"recoveries={trainer.recoveries}")
 

@@ -70,7 +70,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import compat
+from repro import compat, obs
 from repro.kernels import gspn_scan as _pk
 from repro.kernels import ref as _ref
 
@@ -270,13 +270,20 @@ def _block_scan(cfg: SPConfig, x, wl, wc, wr, lam, *, reverse: bool):
 
     Returns (h, b_in): globally-corrected outputs for the local rows
     (f32) and the corrected incoming boundary (f32, (G, W)).
+
+    The four phases are wrapped in ``jax.named_scope`` so the XLA
+    profiler timeline aligns with the span names (DESIGN.md §13).
     """
-    h_loc = _local_scan(cfg, x, wl, wc, wr, lam,
-                        reverse=reverse).astype(jnp.float32)
+    with jax.named_scope("sp.local_scan"):
+        h_loc = _local_scan(cfg, x, wl, wc, wr, lam,
+                            reverse=reverse).astype(jnp.float32)
     b_last = h_loc[:, 0, :] if reverse else h_loc[:, -1, :]
-    t = block_transfer_operator(wl, wc, wr, reverse=reverse)
-    b_in = _exchange(t, b_last, cfg, reverse=reverse)
-    h = h_loc + propagate_boundary(b_in, wl, wc, wr, reverse=reverse)
+    with jax.named_scope("sp.transfer_operator"):
+        t = block_transfer_operator(wl, wc, wr, reverse=reverse)
+    with jax.named_scope("sp.exchange"):
+        b_in = _exchange(t, b_last, cfg, reverse=reverse)
+    with jax.named_scope("sp.correction"):
+        h = h_loc + propagate_boundary(b_in, wl, wc, wr, reverse=reverse)
     return h, b_in
 
 
@@ -426,6 +433,27 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
                        boundary_dtype if boundary_dtype is not None
                        else jnp.float32)),
                    pipeline_depth=pipeline_depth)
+    # Traced-launch accounting of the one boundary exchange (DESIGN.md
+    # §13): analytic per-scan byte counts, recorded once per jit TRACE of
+    # this call site (jit caching means executed steps reuse the trace).
+    # activation_bytes is what a naive full-activation collective would
+    # move — the traffic the compact exchange avoids.
+    wire_bytes = jnp.dtype(cfg.boundary_dtype).itemsize
+    if cfg.resolved_strategy() == "ppermute":
+        n_ops = n_seq - 1
+        boundary_bytes = (n_seq - 1) * g * w * wire_bytes
+    else:
+        n_ops = 1
+        boundary_bytes = n_seq * (gw * w * w + g * w) * wire_bytes
+    act_bytes = x.size * jnp.dtype(x.dtype).itemsize
+    obs.counter("sp_exchanges_total").inc()
+    obs.counter("sp_collective_ops_total").inc(n_ops)
+    obs.counter("sp_boundary_bytes_total").inc(boundary_bytes)
+    obs.counter("sp_activation_bytes_total").inc(act_bytes)
+    obs.event("sp.exchange", strategy=cfg.resolved_strategy(),
+              n_blocks=n_seq, collective_ops=n_ops,
+              boundary_bytes=boundary_bytes, activation_bytes=act_bytes,
+              wire_dtype=cfg.boundary_dtype)
     if batch_axes is None:
         batch_axes = ("pod", "data")
     batch_axes = tuple(a for a in batch_axes

@@ -24,12 +24,19 @@ throughput is independent of request mix; works for every architecture
 family (KV for attention, SSM states for Mamba/xLSTM, the O(√L) row cache
 for the GSPN mixer).
 
-Observability: per-request TTFT / queue delay / inter-token latencies and
-a streaming ``stream(uid, token)`` callback; engine-level counters in
-``ServeEngine.metrics`` (ticks, decode steps, prefill chunks, queue depth).
-Batch drivers collect ``run()``'s results dict; long-running front-ends
-pass ``on_finish`` so retired results are delivered instead of retained
-and engine state stays bounded.
+Observability (DESIGN.md §13): per-request TTFT / queue delay /
+inter-token latencies and a streaming ``stream(uid, token)`` callback;
+engine-level counters and latency histograms in the process-global
+``repro.obs`` registry (``serve_*`` metrics), with ``ServeEngine.metrics``
+kept as a per-engine compat view (the historical dict keys plus a derived
+``queue_depth_mean``).  With tracing enabled the engine emits the request
+lifecycle as spans: one async ``request`` span per uid
+(queued → admitted → finished) enclosing the engine thread's
+``serve.prefill_chunk`` / ``serve.decode_step`` child spans, the latter
+annotated with the autotuner-resolved kernel plan.  Batch drivers collect
+``run()``'s results dict; long-running front-ends pass ``on_finish`` so
+retired results are delivered instead of retained and engine state stays
+bounded.
 """
 
 from __future__ import annotations
@@ -43,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import lm as lm_mod
 from repro.serve.cache import (StateCachePool, narrow_state,
                                update_cache_slots)  # noqa: F401
@@ -55,6 +63,42 @@ class Request:
     uid: int
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 32
+
+
+def _serve_metrics():
+    """Engine-level metrics in the process-global registry (get-or-create
+    per access, so a test-time registry reset can never strand the
+    engine on dead metric objects)."""
+    return {
+        "ticks": obs.counter("serve_ticks_total", "scheduler quanta run"),
+        "decode": obs.counter("serve_decode_steps_total",
+                              "batched decode steps"),
+        "chunks": obs.counter("serve_prefill_chunks_total",
+                              "prefill chunks advanced"),
+        "submitted": obs.counter("serve_requests_submitted_total",
+                                 "requests accepted by submit()"),
+        "finished": obs.counter("serve_requests_finished_total",
+                                "requests retired (eos or length)"),
+        "qdepth": obs.gauge("serve_queue_depth",
+                            "admission-queue depth after the last admit"),
+        "ttft": obs.histogram("serve_ttft_seconds",
+                              help="submit -> first token"),
+        "qdelay": obs.histogram("serve_queue_delay_seconds",
+                                help="submit -> admission"),
+        "itl": obs.histogram("serve_itl_seconds",
+                             help="inter-token latency"),
+        "qdepth_hist": obs.histogram("serve_queue_depth_ticks",
+                                     buckets=obs.DEPTH_BUCKETS,
+                                     help="queue depth sampled per tick"),
+    }
+
+
+def _kernel_plan_summary() -> str:
+    """Compact string of every (row_tile, pipeline_depth) plan the
+    autotuner has resolved in this process — the decode-step span
+    annotation (DESIGN.md §11/§13)."""
+    from repro.kernels import autotune
+    return autotune.plans_summary()
 
 
 def sample_tokens(logits, rng, temperature: float, top_k: int):
@@ -78,10 +122,10 @@ def drive(engine, requests, arrivals, *, idle_sleep: float = 0.002):
     the engine in between, and return elapsed wall-clock seconds once the
     engine drains.  Open-loop means arrivals never wait for completions —
     queueing shows up in the metrics instead of being hidden."""
-    t0 = time.perf_counter()
+    t0 = obs.monotonic()
     nxt = 0
     while nxt < len(requests) or not engine.idle:
-        now = time.perf_counter() - t0
+        now = obs.monotonic() - t0
         while nxt < len(requests) and arrivals[nxt] <= now:
             engine.submit(requests[nxt])
             nxt += 1
@@ -89,7 +133,7 @@ def drive(engine, requests, arrivals, *, idle_sleep: float = 0.002):
             time.sleep(min(arrivals[nxt] - now, idle_sleep))
             continue
         engine.tick()
-    return time.perf_counter() - t0
+    return obs.monotonic() - t0
 
 
 @dataclasses.dataclass
@@ -163,12 +207,24 @@ class ServeEngine:
         self.last_token = jnp.zeros((self.bs, 1), jnp.int32)
         self.active = np.zeros((self.bs,), bool)
         self.results: dict = {}
-        self.metrics = {"ticks": 0, "decode_steps": 0, "prefill_chunks": 0,
-                        "queue_depth_max": 0, "queue_depth_sum": 0,
-                        "depth_samples": 0,
-                        # bounded: a long-running server must not grow a
-                        # per-request list without limit
-                        "admission_order": collections.deque(maxlen=1024)}
+        self._m = {"ticks": 0, "decode_steps": 0, "prefill_chunks": 0,
+                   "queue_depth_max": 0, "queue_depth_sum": 0,
+                   "depth_samples": 0,
+                   # bounded: a long-running server must not grow a
+                   # per-request list without limit
+                   "admission_order": collections.deque(maxlen=1024)}
+
+    @property
+    def metrics(self) -> dict:
+        """Per-engine compat view of the historical counter dict, plus
+        ``queue_depth_mean`` derived ONCE here at snapshot time (callers
+        used to recompute ``queue_depth_sum / depth_samples`` by hand).
+        The same counters also feed the process-global ``repro.obs``
+        registry (``serve_*``) for JSON/Prometheus export."""
+        m = dict(self._m)
+        m["queue_depth_mean"] = (m["queue_depth_sum"] / m["depth_samples"]
+                                 if m["depth_samples"] else 0.0)
+        return m
 
     def reset(self):
         """Clear all scheduling state (fresh pool pages included) but keep
@@ -202,7 +258,11 @@ class ServeEngine:
                 f"prompt ({len(req.prompt)}) + max_new_tokens "
                 f"({req.max_new_tokens}) needs {need} cache rows, exceeding "
                 f"the per-slot capacity max_len={self.max_len}")
-        self.waiting.append((req, time.perf_counter()))
+        self.waiting.append((req, obs.monotonic()))
+        _serve_metrics()["submitted"].inc()
+        obs.async_begin("request", req.uid, prompt_tokens=len(req.prompt),
+                        max_new_tokens=req.max_new_tokens)
+        obs.event("request.queued", uid=req.uid)
 
     def _pop_next(self):
         if self.scheduler == "sjf":
@@ -245,8 +305,9 @@ class ServeEngine:
             if slot is None:
                 break                        # backpressure: batch is full
             req, t_submit = self._pop_next()
-            t_admit = time.perf_counter()
-            self.metrics["admission_order"].append(req.uid)
+            t_admit = obs.monotonic()
+            self._m["admission_order"].append(req.uid)
+            obs.event("request.admitted", uid=req.uid, slot=slot)
             if self.prefill_chunk and len(req.prompt) > self.prefill_chunk:
                 # A fresh zeroed batch-1 cache per admission (once per
                 # request, not per chunk).  Reusing a persistent scratch
@@ -260,10 +321,12 @@ class ServeEngine:
                     "t_submit": t_submit, "t_admit": t_admit,
                 }
             else:
-                prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-                logits, new_caches = self._prefill(self.params, prompt)
-                first = self._sample_first(logits[0, -1])
-                self.pool.commit(slot, new_caches)
+                with obs.trace("serve.prefill", uid=req.uid,
+                               prompt_tokens=len(req.prompt)):
+                    prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+                    logits, new_caches = self._prefill(self.params, prompt)
+                    first = self._sample_first(logits[0, -1])
+                    self.pool.commit(slot, new_caches)
                 self._activate(req, slot, first, t_submit, t_admit, 0)
 
     def _advance_prefill(self):
@@ -274,15 +337,18 @@ class ServeEngine:
         off = st["off"]
         end = min(off + self.prefill_chunk, len(st["toks"]))
         last = end == len(st["toks"])
-        chunk = jnp.asarray(st["toks"][off:end], jnp.int32)[None]
-        # only the final chunk's logits feed sampling; intermediate chunks
-        # skip the vocab-head projection entirely
-        logits, st["cache"] = self._prefill_chunk_fn(
-            self.params, chunk, st["cache"], jnp.asarray(off, jnp.int32),
-            last)
+        with obs.trace("serve.prefill_chunk", uid=st["req"].uid,
+                       index=st["chunks"], offset=off, tokens=end - off):
+            chunk = jnp.asarray(st["toks"][off:end], jnp.int32)[None]
+            # only the final chunk's logits feed sampling; intermediate
+            # chunks skip the vocab-head projection entirely
+            logits, st["cache"] = self._prefill_chunk_fn(
+                self.params, chunk, st["cache"], jnp.asarray(off, jnp.int32),
+                last)
         st["off"] = end
         st["chunks"] += 1
-        self.metrics["prefill_chunks"] += 1
+        self._m["prefill_chunks"] += 1
+        _serve_metrics()["chunks"].inc()
         if last:
             first = self._sample_first(logits[0, -1])
             self.pool.commit(st["slot"], st["cache"])
@@ -291,9 +357,14 @@ class ServeEngine:
             self._inflight = None
 
     def _activate(self, req, slot, first, t_submit, t_admit, chunks):
-        now = time.perf_counter()
+        now = obs.monotonic()
         res = Result(uid=req.uid, tokens=[first], ttft=now - t_submit,
                      queue_delay=t_admit - t_submit, prefill_chunks=chunks)
+        sm = _serve_metrics()
+        sm["ttft"].observe(res.ttft)
+        sm["qdelay"].observe(res.queue_delay)
+        obs.event("request.first_token", uid=req.uid,
+                  ttft_ms=round(res.ttft * 1e3, 3))
         self.slot_req[slot] = req
         self._slot_res[slot] = res
         self._slot_t_last[slot] = now
@@ -310,6 +381,9 @@ class ServeEngine:
     def _retire(self, slot, reason: str):
         res = self._slot_res[slot]
         res.finish_reason = reason
+        _serve_metrics()["finished"].inc()
+        obs.async_end("request", res.uid, finish_reason=reason,
+                      tokens=len(res.tokens))
         if self.on_finish is not None:
             # long-running front-ends consume results here; nothing is
             # retained engine-side, so state stays bounded
@@ -323,44 +397,63 @@ class ServeEngine:
 
     def _decode_step(self):
         """One decode step for the whole batch."""
-        self.rng, sub = jax.random.split(self.rng)
-        nxt, new_caches = self._decode(self.params, self.last_token,
-                                       self.pool.caches, sub)
-        self.pool.update(new_caches)
-        self.metrics["decode_steps"] += 1
-        nxt_host = np.asarray(nxt)
-        self.last_token = nxt[:, None]
-        now = time.perf_counter()
-        for slot in range(self.bs):
-            if not self.active[slot]:
-                continue
-            tok = int(nxt_host[slot])
-            res = self._slot_res[slot]
-            res.tokens.append(tok)
-            res.itl.append(now - self._slot_t_last[slot])
-            self._slot_t_last[slot] = now
-            if self.stream:
-                self.stream(res.uid, tok)
-            req = self.slot_req[slot]
-            if self.eos_id is not None and tok == self.eos_id:
-                self._retire(slot, "eos")
-            elif len(res.tokens) >= req.max_new_tokens:
-                self._retire(slot, "length")
+        sm = _serve_metrics()
+        with obs.trace("serve.decode_step",
+                       batch=int(self.active.sum())) as sp:
+            self.rng, sub = jax.random.split(self.rng)
+            nxt, new_caches = self._decode(self.params, self.last_token,
+                                           self.pool.caches, sub)
+            self.pool.update(new_caches)
+            self._m["decode_steps"] += 1
+            sm["decode"].inc()
+            nxt_host = np.asarray(nxt)
+            if obs.enabled():
+                # annotate with the autotuner-resolved (row_tile, depth)
+                # plans the launches inside this step funnelled through
+                sp.set(plan=_kernel_plan_summary())
+            self.last_token = nxt[:, None]
+            now = obs.monotonic()
+            for slot in range(self.bs):
+                if not self.active[slot]:
+                    continue
+                tok = int(nxt_host[slot])
+                res = self._slot_res[slot]
+                res.tokens.append(tok)
+                res.itl.append(now - self._slot_t_last[slot])
+                sm["itl"].observe(now - self._slot_t_last[slot])
+                self._slot_t_last[slot] = now
+                if self.stream:
+                    self.stream(res.uid, tok)
+                req = self.slot_req[slot]
+                if self.eos_id is not None and tok == self.eos_id:
+                    self._retire(slot, "eos")
+                elif len(res.tokens) >= req.max_new_tokens:
+                    self._retire(slot, "length")
 
     # -- main loop ----------------------------------------------------------
     def tick(self):
         """One scheduling quantum: admit, one prefill chunk, one decode
         step.  Drivers interleave ``submit``/``tick`` to model arrivals."""
-        self.metrics["ticks"] += 1
-        depth = self.queue_depth
-        self.metrics["queue_depth_max"] = max(
-            self.metrics["queue_depth_max"], depth)
-        self.metrics["queue_depth_sum"] += depth
-        self.metrics["depth_samples"] += 1
-        self._admit()
-        self._advance_prefill()
-        if self.active.any():
-            self._decode_step()
+        with obs.trace("serve.tick"):
+            sm = _serve_metrics()
+            self._m["ticks"] += 1
+            sm["ticks"].inc()
+            self._admit()
+            # Depth is sampled AFTER admission: requests that found a free
+            # slot this very tick never waited it out, so counting them
+            # (the old pre-admit sample) double-counted depth on every
+            # tick that retired a request and admitted its replacement.
+            # What remains in `waiting` here is true backpressure.
+            depth = self.queue_depth
+            self._m["queue_depth_max"] = max(
+                self._m["queue_depth_max"], depth)
+            self._m["queue_depth_sum"] += depth
+            self._m["depth_samples"] += 1
+            sm["qdepth"].set(depth)
+            sm["qdepth_hist"].observe(depth)
+            self._advance_prefill()
+            if self.active.any():
+                self._decode_step()
 
     # kept as an alias of the scheduling quantum for older callers
     step = tick

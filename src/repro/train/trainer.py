@@ -21,13 +21,12 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro import compat
+from repro import compat, obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, host_batch
 from repro.optim.adamw import AdamWConfig
@@ -79,6 +78,7 @@ class Trainer:
         self.stragglers = 0
         self.recoveries = 0
         self.history: list = []
+        self._last_scale = None
 
     # -- state management ---------------------------------------------------
     def init_or_restore(self, seed: int = 0):
@@ -104,6 +104,21 @@ class Trainer:
         if sync:
             self.ckpt.wait()
 
+    def _note_loss_scale(self, metrics):
+        """Emit a loss-scale trace event on every scale change or
+        non-finite-gradient step (DESIGN.md §13).  No-op for runs without
+        dynamic loss scaling (step metrics lack the keys)."""
+        if "loss_scale" not in metrics:
+            return
+        scale = float(metrics["loss_scale"])
+        finite = float(metrics.get("grads_finite", 1.0))
+        if scale != self._last_scale or finite < 1.0:
+            obs.event("train.loss_scale", step=self.step, scale=scale,
+                      grads_finite=finite)
+            if finite < 1.0:
+                obs.counter("train_nonfinite_steps_total").inc()
+        self._last_scale = scale
+
     # -- main loop ------------------------------------------------------------
     def run(self, n_steps: int):
         if self.state is None:
@@ -111,21 +126,26 @@ class Trainer:
         end = self.step + n_steps
         retries = 0
         while self.step < end:
-            raw = host_batch(self.data_cfg, self.step)
-            batch = {k: jax.device_put(jnp.asarray(v),
-                                       self.setup.batch_shardings[k])
-                     for k, v in raw.items()}
-            t0 = time.perf_counter()
+            with obs.trace("train.data", step=self.step):
+                raw = host_batch(self.data_cfg, self.step)
+                batch = {k: jax.device_put(jnp.asarray(v),
+                                           self.setup.batch_shardings[k])
+                         for k, v in raw.items()}
+            t0 = obs.monotonic()
             try:
                 if self.failure_injector is not None:
                     self.failure_injector(self.step)
-                with compat.set_mesh(self.mesh):
+                with obs.trace("train.step", step=self.step), \
+                        compat.set_mesh(self.mesh):
                     new_state, metrics = self.setup.jit_step(self.state,
                                                              batch)
-                jax.block_until_ready(new_state)
+                    jax.block_until_ready(new_state)
             except Exception as exc:  # noqa: BLE001 — any step failure
                 retries += 1
                 self.recoveries += 1
+                obs.counter("train_recoveries_total").inc()
+                obs.event("train.recovery", step=self.step, retry=retries,
+                          error=type(exc).__name__)
                 log.warning("step %d failed (%s); recovering (retry %d)",
                             self.step, exc, retries)
                 if retries > self.tcfg.max_retries:
@@ -138,12 +158,19 @@ class Trainer:
                 continue
             retries = 0
             self.state = new_state
-            dt = time.perf_counter() - t0
+            dt = obs.monotonic() - t0
+            obs.counter("train_steps_total").inc()
+            obs.histogram("train_step_seconds").observe(dt)
+            self._note_loss_scale(metrics)
 
             if self.step > self.tcfg.straggler_warmup:
                 if self.ewma is not None and dt > \
                         self.tcfg.straggler_factor * self.ewma:
                     self.stragglers += 1
+                    obs.counter("train_stragglers_total").inc()
+                    obs.event("train.straggler", step=self.step,
+                              dt_ms=round(dt * 1e3, 3),
+                              ewma_ms=round(self.ewma * 1e3, 3))
                     log.warning("straggler step %d: %.3fs vs ewma %.3fs",
                                 self.step, dt, self.ewma)
                 self.ewma = dt if self.ewma is None else \

@@ -40,6 +40,10 @@ def pytest_configure(config):
         "markers",
         "bench: benchmark --json schema and perf-regression-gate tests "
         "(pytest -m bench)")
+    config.addinivalue_line(
+        "markers",
+        "obs: tracing/metrics subsystem + instrumentation contracts, "
+        "including the disabled-overhead pin (pytest -m obs)")
 
 
 @pytest.fixture(scope="session", autouse=True)

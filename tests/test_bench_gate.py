@@ -220,9 +220,11 @@ def test_json_payload_roundtrips_through_gate_loader(tmp_path):
             "serve/load,89.1,ttft=1,qd=2"]     # derived may contain commas
     payload = bench_run.build_payload(rows, smoke=True, only={"fig3"},
                                       failed=["table1"])
-    assert payload["schema"] == bench_run.JSON_SCHEMA == 1
+    assert payload["schema"] == bench_run.JSON_SCHEMA == 2
     assert payload["only"] == ["fig3"]
     assert payload["failed"] == ["table1"]
+    # rows built without timing stats carry stats=None (schema-2 shape)
+    assert all(r["stats"] is None for r in payload["rows"])
 
     path = tmp_path / "report.json"
     path.write_text(json.dumps(payload))

@@ -26,3 +26,20 @@ def test_design_citations_resolve():
             if n not in sections:
                 bad.append((name, f"§{n}"))
     assert not bad, f"unresolved DESIGN.md citations: {bad}"
+
+
+def test_design_s13_documents_observability():
+    """§13 is the observability contract: the section must exist and
+    name the pieces the instrumented layers rely on, so a future rewrite
+    cannot silently drop the documented semantics."""
+    text = (ROOT / "DESIGN.md").read_text()
+    m = re.search(r"^## §13 .*$", text, flags=re.M)
+    assert m, "DESIGN.md is missing §13 (observability)"
+    body = text[m.end():]
+    nxt = re.search(r"^## §\d+", body, flags=re.M)
+    section = body[:nxt.start()] if nxt else body
+    for needle in ("obs.trace", "Chrome trace", "Prometheus",
+                   "--trace-out", "--metrics-out", "plans_summary",
+                   "queue_depth_mean", "named_scope"):
+        assert needle in section, f"DESIGN.md §13 no longer mentions " \
+                                  f"{needle!r}"
