@@ -29,7 +29,7 @@ import numpy as np
 
 import benchmarks.common as common
 from benchmarks.common import emit, make_gspn_inputs, scan_bytes, time_fn
-from repro.kernels import autotune
+from repro.kernels import ScanSpec, autotune
 from repro.kernels.ops import gspn_scan
 from repro.kernels.tuning import pick_row_tile_for_policy
 from repro.models.lm import LMConfig
@@ -85,15 +85,16 @@ def run():
                 # §10) instead of a hand-passed constant, and the emitted
                 # tile is what the launch actually used: the tuner's
                 # cached choice with the policy heuristic as fallback
-                # (DESIGN.md §11).  The key legs are derived from the
+                # (DESIGN.md §11).  The spec legs are derived from the
                 # operands (not hand-written) so they track the launch's
-                # own resolution inside gspn_scan_fwd_pallas.
+                # own resolution inside gspn_scan_fwd_pallas (§14).
                 x_in, wl_in = inputs[0], inputs[1]
-                plan = autotune.plan_for(
-                    h, w, c=x_in.shape[0], direction="fwd", impl="pallas",
-                    dtype=dtype,
-                    channel_shared=x_in.shape[0] != wl_in.shape[0],
-                    interpret=True)
+                cpw = x_in.shape[0] // wl_in.shape[0]
+                plan = autotune.plan_for_spec(
+                    ScanSpec(direction="fwd", impl="pallas",
+                             channels_per_weight=cpw,
+                             stream_dtype=str(jnp.dtype(dtype))),
+                    h, w, c=x_in.shape[0])
                 heur = pick_row_tile_for_policy(
                     h, w, dname, cap=autotune.DEFAULT_CAP,
                     pipeline_depth=plan.pipeline_depth).row_tile

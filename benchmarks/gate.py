@@ -67,6 +67,20 @@ class GateResult:
 SUPPORTED_SCHEMAS = (1, 2)
 
 
+class UnsupportedSchemaError(ValueError):
+    """A structurally valid report from a NEWER gate than this one.
+
+    Raised only when the schema is an int above max(SUPPORTED_SCHEMAS) —
+    i.e. the report was written by a future benchmarks.run.  main()
+    catches this and warn-skips (exit 0) instead of wedging CI on the
+    first PR that bumps the report schema: the old gate binary cannot
+    gate what it cannot parse, and a skipped gate is a visible warning
+    while a crashed gate blocks every unrelated PR.  Garbage schemas
+    (non-int, or unknown values BELOW the supported range) still raise
+    plain ValueError — those are corrupt reports, not version skew.
+    """
+
+
 def load_report(path) -> dict:
     """Read and validate one --json report (schema + row shape)."""
     payload = json.loads(pathlib.Path(path).read_text())
@@ -74,6 +88,11 @@ def load_report(path) -> dict:
         raise ValueError(f"{path}: not a benchmarks.run --json report")
     schema = payload.get("schema", 1)
     if schema not in SUPPORTED_SCHEMAS:
+        if isinstance(schema, int) and not isinstance(schema, bool) \
+                and schema > max(SUPPORTED_SCHEMAS):
+            raise UnsupportedSchemaError(
+                f"{path}: report schema {schema} is newer than this gate "
+                f"supports (max {max(SUPPORTED_SCHEMAS)})")
         raise ValueError(f"{path}: unsupported report schema {schema!r}")
     for row in payload["rows"]:
         if "name" not in row or "us_per_call" not in row:
@@ -150,7 +169,13 @@ def main(argv=None) -> int:
                          "instead of gating (re-baselining)")
     args = ap.parse_args(argv)
 
-    current = load_report(args.current)
+    try:
+        current = load_report(args.current)
+    except UnsupportedSchemaError as e:
+        # Forward-compat: a report from a newer benchmarks.run must not
+        # wedge CI (and must not be enshrined as a baseline either).
+        print(f"[gate] WARNING: {e} — skipping gate")
+        return 0
     ordering = dtype_ordering_violations(current)
     for v in ordering:
         print(f"[gate] ORDERING: {v}")
@@ -167,7 +192,11 @@ def main(argv=None) -> int:
               f"({len(current['rows'])} rows)")
         return 0
 
-    baseline = load_report(args.baseline)
+    try:
+        baseline = load_report(args.baseline)
+    except UnsupportedSchemaError as e:
+        print(f"[gate] WARNING: {e} — skipping gate")
+        return 0
     res = compare(baseline, current, tolerance=args.tolerance,
                   min_us=args.min_us)
     for w in res.warnings:

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ops import gspn_scan, gspn_scan_pair
+from repro.kernels.spec import ScanSpec
 
 DIRECTIONS = ("tb", "bt", "lr", "rl")
 
@@ -148,8 +149,12 @@ def _multi_directional_scan(x, wl, wc, wr, lam, directions, **scan_kwargs):
     # spatially-sharded path ("sp") also runs per direction: each oriented
     # scan owns its own boundary exchange over the seq mesh axis, and the
     # opposite member of a pair scans the other way through the same
-    # blocks, so there is no shared launch to fuse (DESIGN.md §8).
-    fuse = scan_kwargs.get("impl", "auto") not in ("per_step", "sp")
+    # blocks, so there is no shared launch to fuse (DESIGN.md §8).  The
+    # impl leg lives in the ScanSpec when one is passed.
+    sk_spec = scan_kwargs.get("spec")
+    impl = (sk_spec.impl if sk_spec is not None
+            else scan_kwargs.get("impl", "auto"))
+    fuse = impl not in ("per_step", "sp")
 
     out = [None] * len(directions)
     fused = set()
@@ -240,12 +245,19 @@ def _normalize_taps_oriented(logits, direction: str, mode: str):
     return normalize_taps(logits, mode)
 
 
-def _scan_precision_kwargs(cfg):
-    """The dtype legs of ``scan_kwargs`` shared by the attention module
-    and the sequence mixer (DESIGN.md §10)."""
+def _scan_spec_kwargs(cfg, mesh, *, boundary: str = "one_shot"):
+    """The ``scan_kwargs`` shared by the attention module, the sequence
+    mixer and chunked prefill: ONE :class:`ScanSpec` carrying the whole
+    launch policy (impl, dtype legs, boundary behaviour — DESIGN.md §10,
+    §14), plus the sp ROUTING legs (mesh/axis/strategy/wire dtype) that
+    describe where the scan runs rather than what it computes."""
     cd = jnp.dtype(cfg.compute_dtype)
     bd = cfg.boundary_dtype if cfg.boundary_dtype is not None else cd
-    return dict(carry_dtype=str(jnp.dtype(cfg.carry_dtype)),
+    spec = ScanSpec(impl=cfg.impl, stream_dtype=str(cd),
+                    carry_dtype=str(jnp.dtype(cfg.carry_dtype)),
+                    boundary=boundary)
+    return dict(spec=spec, mesh=mesh, seq_axis=cfg.seq_axis,
+                sp_strategy=cfg.sp_strategy,
                 sp_boundary_dtype=jnp.dtype(bd))
 
 
@@ -297,9 +309,7 @@ def apply_gspn_attention(params, x, cfg: GSPNAttentionConfig, *, mesh=None):
     h_all = directional_scan(
         x_scan, jnp.stack(wls), jnp.stack(wcs), jnp.stack(wrs),
         jnp.stack(lams), cfg.directions,
-        chunk=cfg.chunk, impl=cfg.impl,
-        mesh=mesh, seq_axis=cfg.seq_axis, sp_strategy=cfg.sp_strategy,
-        **_scan_precision_kwargs(cfg),
+        chunk=cfg.chunk, **_scan_spec_kwargs(cfg, mesh),
     )                                                      # (D, B*Cp, H, W)
 
     # Directional merge accumulates in f32 whatever the stream dtype.
@@ -468,9 +478,7 @@ def apply_gspn_seq_mixer(params, x, cfg: GSPNSeqConfig,
     x_p, taps, row_g, lam, u = _seq_mixer_projections(params, xf)
     fold, unfold = _fold_ops(b, h, w, l)
 
-    scan_kwargs = dict(impl=cfg.impl, mesh=mesh, seq_axis=cfg.seq_axis,
-                       sp_strategy=cfg.sp_strategy,
-                       **_scan_precision_kwargs(cfg))
+    scan_kwargs = _scan_spec_kwargs(cfg, mesh)
 
     # Pass 1: causal T->B 2D scan in proxy space, channel-shared taps.
     wl, wc_, wr = _tb_taps(taps, fold, b, h, w, cfg.norm_mode, dtype=cd)
@@ -536,9 +544,11 @@ def gspn_seq_prefill_chunk(params, x, cfg: GSPNSeqConfig, cache, *,
     x_p, taps, row_g, lam, u = _seq_mixer_projections(params, xf)
     fold, unfold = _fold_ops(b, hc, w, t)
 
-    scan_kwargs = dict(impl=cfg.impl, mesh=mesh, seq_axis=cfg.seq_axis,
-                       sp_strategy=cfg.sp_strategy,
-                       **_scan_precision_kwargs(cfg))
+    # The resumed-carry chunk gets the chunk_resume boundary label: same
+    # numerics as one_shot (the resumed row is a synthetic row 0 of the
+    # launch), but the autotuner keys the ragged chunk-grid launches
+    # separately from full-length prefill (DESIGN.md §14).
+    scan_kwargs = _scan_spec_kwargs(cfg, mesh, boundary="chunk_resume")
 
     # Pass 1: T->B scan seeded with the incoming boundary row.  Row 0 of
     # the seeded grid carries prev_row (λ=1, taps=0 ⇒ h[0] = prev_row);

@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+# The one declarative launch-configuration value every call path shares
+# (DESIGN.md §14).  Re-exported here so callers outside the kernel stack
+# can build specs without reaching into the leaf module.
+from repro.kernels.spec import ScanSpec, enumerate_specs  # noqa: F401

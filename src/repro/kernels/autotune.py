@@ -46,7 +46,9 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.kernels import spec as spec_mod
 from repro.kernels import tuning
+from repro.kernels.spec import BOUNDARIES, ScanSpec
 
 ENV_CACHE_PATH = "GSPN_TUNE_CACHE"
 SEED_CACHE_PATH = pathlib.Path(__file__).with_name("tune_cache_seed.json")
@@ -54,7 +56,11 @@ SEED_CACHE_PATH = pathlib.Path(__file__).with_name("tune_cache_seed.json")
 # revolving-buffer BlockSpec stream, 2 = the explicitly staged pipeline —
 # DESIGN.md §12).  Schema-1 files load unchanged: a missing field reads
 # as depth 1, reproducing the pre-PR6 kernels exactly.
-SCHEMA_VERSION = 2
+# Schema 3 (PR 8): keys are the ScanSpec canonical serialization — the
+# legacy key plus a trailing "|bnd-{boundary}" leg (DESIGN.md §14).
+# Schema-2 files load unchanged: lookup falls back to the legacy
+# encoding, so a boundary-less entry serves every boundary mode.
+SCHEMA_VERSION = 3
 
 # Heuristic-fallback tile cap — matches gspn_scan.DEFAULT_ROW_TILE so a
 # cache miss reproduces the pre-tuner behaviour bit-for-bit.  Measured
@@ -138,13 +144,29 @@ class ScanKey:
     dtype: str                   # streamed dtype (operand tiles)
     carry_dtype: str             # VMEM carry dtype (f32 under the policy)
     channel_shared: bool         # compact channel propagation active
+    boundary: str = "one_shot"   # one_shot | chunk_resume | sp_block_local
 
     def __post_init__(self):
         if self.direction not in DIRECTIONS:
             raise ValueError(f"unknown direction {self.direction!r}; "
                              f"expected one of {DIRECTIONS}")
+        if self.boundary not in BOUNDARIES:
+            raise ValueError(f"unknown boundary {self.boundary!r}; "
+                             f"expected one of {BOUNDARIES}")
 
     def encode(self) -> str:
+        """Schema-3 key: device + shape legs, then the ScanSpec canonical
+        serialization verbatim (spec.canonical_key) — appending the
+        boundary leg at the END keeps ``plans_summary``'s segment parsing
+        and every schema-2 prefix intact."""
+        return f"{self.device}|h{self.h}|w{self.w}|c{self.c}|" + \
+            spec_mod.canonical_key(self.direction, self.impl, self.dtype,
+                                   self.carry_dtype, self.channel_shared,
+                                   self.boundary)
+
+    def encode_legacy(self) -> str:
+        """The schema-2 key (no boundary leg) — the read-compat fallback
+        for caches written before schema 3."""
         return (f"{self.device}|h{self.h}|w{self.w}|c{self.c}"
                 f"|{self.direction}|{self.impl}|{self.dtype}"
                 f"|carry-{self.carry_dtype}|cs{int(self.channel_shared)}")
@@ -294,7 +316,13 @@ class TuningCache:
         return path
 
     def lookup(self, key: ScanKey) -> dict | None:
-        return self.entries.get(key.encode())
+        """Schema-3 key first, then the schema-2 legacy encoding: a
+        boundary-less pre-schema-3 entry serves every boundary mode (the
+        tile optimum does not depend on how the segment resumes)."""
+        hit = self.entries.get(key.encode())
+        if hit is not None:
+            return hit
+        return self.entries.get(key.encode_legacy())
 
     def store(self, key: ScanKey, entry: dict):
         self.entries[key.encode()] = dict(entry)
@@ -343,23 +371,37 @@ def _entry_depth(entry: dict) -> int:
         return -1
 
 
-def _entry_valid(key: ScanKey, entry: dict, *,
-                 vmem_budget: int = tuning.VMEM_BYTES) -> bool:
-    """A cache entry is honoured only if it is still safe for the shape:
-    a power-of-two row tile dividing H, a known pipeline depth, and a
-    minimal (single-buffered) working set at that depth fitting the
-    budget.  Anything else falls back silently."""
+def _entry_invalid_reason(key: ScanKey, entry: dict, *,
+                          vmem_budget: int = tuning.VMEM_BYTES) -> str | None:
+    """Why a cache entry cannot be honoured for this key, or ``None`` when
+    it is valid: the row tile must be a power of two dividing H, the
+    pipeline depth known, and the minimal (single-buffered) working set at
+    that depth must fit the budget.  ``plan_for`` turns a non-None reason
+    into an obs counter + event so a corrupted or stale cache is visible
+    instead of silently degrading to the heuristic."""
     try:
         t = int(entry["row_tile"])
     except (KeyError, TypeError, ValueError):
-        return False
-    if t < 1 or (t & (t - 1)) or key.h % t:
-        return False
+        return f"row_tile missing or non-integer: {entry.get('row_tile')!r}"
+    if t < 1 or (t & (t - 1)):
+        return f"row_tile {t} is not a positive power of two"
+    if key.h % t:
+        return f"row_tile {t} does not divide h={key.h}"
     depth = _entry_depth(entry)
     if depth not in PIPELINE_DEPTHS:
-        return False
-    return Candidate(t, double_buffer=False,
-                     pipeline_depth=depth).working_set(key) <= vmem_budget
+        return (f"pipeline_depth {entry.get('pipeline_depth')!r} not in "
+                f"{PIPELINE_DEPTHS}")
+    ws = Candidate(t, double_buffer=False,
+                   pipeline_depth=depth).working_set(key)
+    if ws > vmem_budget:
+        return f"working set {ws}B exceeds VMEM budget {vmem_budget}B"
+    return None
+
+
+def _entry_valid(key: ScanKey, entry: dict, *,
+                 vmem_budget: int = tuning.VMEM_BYTES) -> bool:
+    """Boolean view of :func:`_entry_invalid_reason`."""
+    return _entry_invalid_reason(key, entry, vmem_budget=vmem_budget) is None
 
 
 def plan_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
@@ -367,20 +409,22 @@ def plan_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
              carry_dtype="float32", channel_shared: bool = False,
              interpret: bool = False, cache: TuningCache | None = None,
              cap: int = DEFAULT_CAP, row_tile: int | None = None,
-             pipeline_depth: int | None = None) -> ScanPlan:
+             pipeline_depth: int | None = None,
+             boundary: str = "one_shot") -> ScanPlan:
     """THE launch-site entry point: tuned ``(row_tile, pipeline_depth)``
-    if the cache knows this (device, shape, direction, dtype-policy) key,
-    heuristic otherwise.  Explicit ``row_tile`` / ``pipeline_depth``
-    arguments always win; an explicit tile bypasses the cache entirely
-    (a measured entry's depth belongs to the tile it was measured with)
-    and takes the heuristic depth unless one is given.
+    if the cache knows this (device, shape, direction, dtype-policy,
+    boundary) key, heuristic otherwise.  Explicit ``row_tile`` /
+    ``pipeline_depth`` arguments always win; an explicit tile bypasses
+    the cache entirely (a measured entry's depth belongs to the tile it
+    was measured with) and takes the heuristic depth unless one is given.
 
     Every fused-scan launch (fwd, bwd, pair, quad — and through them the
     chunked-prefill and sp block-local paths) funnels here, so one cache
-    governs the whole stack."""
+    governs the whole stack.  Launch sites reach this through
+    :func:`plan_for_spec`."""
     key = ScanKey(device_kind(interpret), h, w, c, direction, impl,
                   str(jnp.dtype(dtype)), str(jnp.dtype(carry_dtype)),
-                  bool(channel_shared))
+                  bool(channel_shared), boundary)
     if row_tile is not None:
         depth = (heuristic_pipeline_depth(key) if pipeline_depth is None
                  else pipeline_depth)
@@ -389,10 +433,20 @@ def plan_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
         return plan
     cache = cache if cache is not None else get_cache()
     entry = cache.lookup(key)
-    if entry is not None and _entry_valid(key, entry):
-        t, depth = int(entry["row_tile"]), _entry_depth(entry)
-        source = "cache"
-    else:
+    if entry is not None:
+        reason = _entry_invalid_reason(key, entry)
+        if reason is None:
+            t, depth = int(entry["row_tile"]), _entry_depth(entry)
+            source = "cache"
+        else:
+            # A present-but-unusable entry is a signal (corrupt file,
+            # stale shape, hand-edited cache) — count it and log why
+            # before degrading to the heuristic.
+            obs.counter("autotune_cache_rejects_total").inc()
+            obs.event("autotune.cache_reject", key=key.encode(),
+                      reason=reason)
+            entry = None
+    if entry is None:
         depth = heuristic_pipeline_depth(key)
         t = heuristic_row_tile(key, cap=cap, pipeline_depth=depth)
         source = "heuristic"
@@ -401,6 +455,23 @@ def plan_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
     plan = ScanPlan(t, depth)
     _record_plan(key, plan, source)
     return plan
+
+
+def plan_for_spec(spec: ScanSpec, h: int, w: int, *, c: int = 0,
+                  cache: TuningCache | None = None,
+                  cap: int = DEFAULT_CAP) -> ScanPlan:
+    """Spec-keyed view of :func:`plan_for` — the launch-site entry point
+    since schema 3.  The cache key is the spec's canonical serialization
+    (``ScanKey.encode`` ends with ``spec.canonical()``) plus the device
+    and shape legs; the spec's explicit ``row_tile`` / ``pipeline_depth``
+    act as the overriding arguments."""
+    return plan_for(h, w, c=c, direction=spec.direction, impl=spec.impl,
+                    dtype=spec.stream_dtype, carry_dtype=spec.carry_dtype,
+                    channel_shared=spec.channel_shared,
+                    interpret=spec.interpret, cache=cache, cap=cap,
+                    row_tile=spec.row_tile,
+                    pipeline_depth=spec.pipeline_depth,
+                    boundary=spec.boundary)
 
 
 def row_tile_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
@@ -463,42 +534,36 @@ def default_runner_factory(key: ScanKey, *, interpret: bool = True,
     from repro.kernels import gspn_scan as _pk
 
     (x, wl, wc, wr, lam), cpw = _make_operands(key, seed)
-    carry = jnp.dtype(key.carry_dtype)
 
     def factory(cand: Candidate):
-        t, depth = cand.row_tile, cand.pipeline_depth
+        # The candidate's knobs travel as ONE ScanSpec — the same object
+        # a production launch site would hand down (DESIGN.md §14).
+        sp = ScanSpec(direction=key.direction, impl=key.impl,
+                      channels_per_weight=max(cpw, 1),
+                      stream_dtype=key.dtype, carry_dtype=key.carry_dtype,
+                      row_tile=cand.row_tile,
+                      pipeline_depth=cand.pipeline_depth,
+                      boundary=key.boundary, interpret=interpret)
         if key.direction == "fwd":
-            run = jax.jit(lambda *a: _pk.gspn_scan_fwd_pallas(
-                *a, channels_per_weight=cpw, row_tile=t,
-                interpret=interpret, carry_dtype=carry,
-                pipeline_depth=depth))
+            run = jax.jit(lambda *a: _pk.gspn_scan_fwd_pallas(*a, spec=sp))
             args = (x, wl, wc, wr, lam)
         elif key.direction == "bwd":
-            run = jax.jit(lambda *a: _pk.gspn_scan_bwd_pallas(
-                *a, channels_per_weight=cpw, row_tile=t,
-                interpret=interpret, pipeline_depth=depth))
+            run = jax.jit(lambda *a: _pk.gspn_scan_bwd_pallas(*a, spec=sp))
             args = (x, wl, wc, wr)          # x stands in for dy
         elif key.direction == "pair_fwd":
             pair = lambda a: jnp.stack([a, a])
             run = jax.jit(lambda xx, l2, w2, c2, r2: _mk.gspn_scan_bidir_pallas(
-                xx, {"wl": w2, "wc": c2, "wr": r2}, l2,
-                channels_per_weight=cpw, row_tile=t,
-                interpret=interpret, carry_dtype=carry,
-                pipeline_depth=depth))
+                xx, {"wl": w2, "wc": c2, "wr": r2}, l2, spec=sp))
             args = (x, pair(lam), pair(wl), pair(wc), pair(wr))
         elif key.direction == "pair_bwd":
             pair = lambda a: jnp.stack([a, a])
             run = jax.jit(lambda d2, w2, c2, r2: _mk.gspn_scan_bidir_bwd_pallas(
-                d2, w2, c2, r2, channels_per_weight=cpw, row_tile=t,
-                interpret=interpret, pipeline_depth=depth))
+                d2, w2, c2, r2, spec=sp))
             args = (pair(x), pair(wl), pair(wc), pair(wr))
         elif key.direction == "quad":
             quad = lambda a: jnp.stack([a] * 4)
             run = jax.jit(lambda xx, l4, w4, c4, r4: _mk.gspn_scan_quad_pallas(
-                xx, {"wl": w4, "wc": c4, "wr": r4}, l4,
-                channels_per_weight=cpw, row_tile=t,
-                interpret=interpret, carry_dtype=carry,
-                pipeline_depth=depth))
+                xx, {"wl": w4, "wc": c4, "wr": r4}, l4, spec=sp))
             args = (x, quad(lam), quad(wl), quad(wc), quad(wr))
         else:  # pragma: no cover — ScanKey.__post_init__ guards this
             raise ValueError(key.direction)

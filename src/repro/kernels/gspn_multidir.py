@@ -47,6 +47,7 @@ from repro.kernels import autotune
 from repro.kernels.gspn_scan import (CompilerParams, _dir_scan, _masked_shifts,
                                      _row, _shift_left, _shift_right,
                                      _stage_rows)
+from repro.kernels.spec import ScanSpec
 
 
 def _launch_span(name, plan, dtype, g, h, w):
@@ -57,21 +58,32 @@ def _launch_span(name, plan, dtype, g, h, w):
                      dtype=str(jnp.dtype(dtype)), g=g, h=h, w=w)
 
 
-def _pair_plan(h: int, w: int, c: int, direction: str, dtype,
-               carry_dtype=jnp.float32, *, channel_shared: bool = False,
+def _pair_spec(spec: ScanSpec | None, direction: str, dtype, *,
+               channels_per_weight: int = 1, carry_dtype=jnp.float32,
                interpret: bool = True, row_tile: int | None = None,
-               pipeline_depth: int | None = None) -> "autotune.ScanPlan":
+               pipeline_depth: int | None = None) -> ScanSpec:
+    """Build (from legacy kwargs) or normalise the spec of one fused
+    pair/quad launch: these entry points own the ``multidir`` impl leg,
+    the direction, and the streamed dtype (always the operands')."""
+    if spec is None:
+        spec = ScanSpec(channels_per_weight=channels_per_weight,
+                        carry_dtype=str(jnp.dtype(carry_dtype)),
+                        row_tile=row_tile, pipeline_depth=pipeline_depth,
+                        interpret=interpret)
+    changes = dict(direction=direction, impl="multidir",
+                   stream_dtype=str(jnp.dtype(dtype)))
+    if direction == "pair_bwd":
+        changes["carry_dtype"] = "float32"   # adjoint carry is always f32
+    return spec.with_(**changes)
+
+
+def _pair_plan(spec: ScanSpec, h: int, w: int, c: int) -> "autotune.ScanPlan":
     """Tile + pipeline depth for the fused pair/quad kernels: measured
-    cache entry when the tuner knows this (device, shape, direction,
-    dtype-policy) key, VMEM-heuristic fallback otherwise (DESIGN.md
-    §11/§12).  The fallback shares the single-direction kernels' cap so
-    fused/unfused tile identically on a cache miss."""
-    return autotune.plan_for(
-        h, w, c=c, direction=direction, impl="multidir",
-        dtype=str(jnp.dtype(dtype)),
-        carry_dtype=str(jnp.dtype(carry_dtype)),
-        channel_shared=channel_shared, interpret=interpret,
-        row_tile=row_tile, pipeline_depth=pipeline_depth)
+    cache entry when the tuner knows this spec's canonical key at this
+    (device, shape), VMEM-heuristic fallback otherwise (DESIGN.md
+    §11/§12/§14).  The fallback shares the single-direction kernels' cap
+    so fused/unfused tile identically on a cache miss."""
+    return autotune.plan_for_spec(spec, h, w, c=c)
 
 
 # ---------------------------------------------------------------------------
@@ -150,22 +162,28 @@ def _kernel_staged(row_tile, cpw,
     o_ref[...] = jnp.swapaxes(ys, 0, 1).astype(o_ref.dtype)
 
 
-def gspn_scan_bidir_pallas(x, taps, lam2, *, channels_per_weight: int = 1,
+def gspn_scan_bidir_pallas(x, taps, lam2, *, spec: ScanSpec | None = None,
+                           channels_per_weight: int = 1,
                            row_tile: int | None = None,
                            interpret: bool = True,
                            carry_dtype=jnp.float32,
                            pipeline_depth: int | None = None):
     """x: (G, H, W); taps: dict with wl/wc/wr each (2, G_w, H, W);
     lam2: (2, G, H, W).  Returns (2, G, H, W) — both directional scans.
-    Streams in the operands' dtype, carries in ``carry_dtype``;
-    ``pipeline_depth=2`` is the staged pipeline (DESIGN.md §12)."""
+    Configuration travels as ONE ``ScanSpec`` (DESIGN.md §14; the loose
+    kwargs are the legacy construction path): streams in the operands'
+    dtype, carries in ``spec.carry_dtype``; ``pipeline_depth=2`` is the
+    staged pipeline (DESIGN.md §12)."""
     g, h, w = x.shape
-    cpw = channels_per_weight
-    gw = g // cpw
-    carry_dtype = jnp.dtype(carry_dtype)
-    plan = _pair_plan(h, w, g, "pair_fwd", x.dtype, carry_dtype,
-                      channel_shared=cpw > 1, interpret=interpret,
+    spec = _pair_spec(spec, "pair_fwd", x.dtype,
+                      channels_per_weight=channels_per_weight,
+                      carry_dtype=carry_dtype, interpret=interpret,
                       row_tile=row_tile, pipeline_depth=pipeline_depth)
+    cpw = spec.channels_per_weight
+    gw = g // cpw
+    carry_dtype = jnp.dtype(spec.carry_dtype)
+    interpret = spec.interpret
+    plan = _pair_plan(spec, h, w, g)
     row_tile, pipeline_depth = plan.row_tile, plan.pipeline_depth
     assert h % row_tile == 0
     assert pipeline_depth in (1, 2), pipeline_depth
@@ -316,6 +334,7 @@ def _bwd_pair_kernel_staged(row_tile, cpw,
 
 
 def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
+                               spec: ScanSpec | None = None,
                                channels_per_weight: int = 1,
                                row_tile: int | None = None,
                                interpret: bool = True,
@@ -325,14 +344,17 @@ def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
     (pre-output-layer) as (2, G, H, W) f32 — one launch, no flipped
     copies."""
     _, g_dim, h, w = dy2.shape
-    cpw = channels_per_weight
-    gw = g_dim // cpw
     # Streamed dtype is dy2's (bf16 tiles halve the working set); the
     # adjoint carry is three f32 tap·adjoint rows regardless of policy
-    # (encoded by the tuner's "pair_bwd" direction).
-    plan = _pair_plan(h, w, g_dim, "pair_bwd", dy2.dtype,
-                      channel_shared=cpw > 1, interpret=interpret,
-                      row_tile=row_tile, pipeline_depth=pipeline_depth)
+    # (encoded by the "pair_bwd" direction leg — _pair_spec forces it).
+    spec = _pair_spec(spec, "pair_bwd", dy2.dtype,
+                      channels_per_weight=channels_per_weight,
+                      interpret=interpret, row_tile=row_tile,
+                      pipeline_depth=pipeline_depth)
+    cpw = spec.channels_per_weight
+    gw = g_dim // cpw
+    interpret = spec.interpret
+    plan = _pair_plan(spec, h, w, g_dim)
     row_tile, pipeline_depth = plan.row_tile, plan.pipeline_depth
     assert h % row_tile == 0
     assert pipeline_depth in (1, 2), pipeline_depth
@@ -397,7 +419,8 @@ def gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2, *,
 # Single-launch quad kernel (square grids).
 # ---------------------------------------------------------------------------
 
-def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
+def gspn_scan_quad_pallas(x, taps4, lam4, *, spec: ScanSpec | None = None,
+                          channels_per_weight: int = 1,
                           row_tile: int | None = None,
                           interpret: bool = True,
                           carry_dtype=jnp.float32,
@@ -418,12 +441,15 @@ def gspn_scan_quad_pallas(x, taps4, lam4, *, channels_per_weight: int = 1,
     """
     g, h, w = x.shape
     assert h == w, "quad single-launch dispatch requires a square grid"
-    cpw = channels_per_weight
-    gw = g // cpw
-    carry_dtype = jnp.dtype(carry_dtype)
-    plan = _pair_plan(h, w, g, "quad", x.dtype, carry_dtype,
-                      channel_shared=cpw > 1, interpret=interpret,
+    spec = _pair_spec(spec, "quad", x.dtype,
+                      channels_per_weight=channels_per_weight,
+                      carry_dtype=carry_dtype, interpret=interpret,
                       row_tile=row_tile, pipeline_depth=pipeline_depth)
+    cpw = spec.channels_per_weight
+    gw = g // cpw
+    carry_dtype = jnp.dtype(spec.carry_dtype)
+    interpret = spec.interpret
+    plan = _pair_plan(spec, h, w, g)
     row_tile, pipeline_depth = plan.row_tile, plan.pipeline_depth
     assert h % row_tile == 0
     assert pipeline_depth in (1, 2), pipeline_depth

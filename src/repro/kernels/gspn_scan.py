@@ -38,6 +38,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import obs
 from repro.kernels import autotune, tuning
+from repro.kernels.spec import ScanSpec
 
 # jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x; accept
 # either so the kernels run on the container's pinned jax.
@@ -220,34 +221,46 @@ def _fwd_kernel_staged(row_tile, chunk_tiles, cpw,
     o_ref[...] = jnp.swapaxes(ys, 0, 1).astype(o_ref.dtype)
 
 
-def gspn_scan_fwd_pallas(x, wl, wc, wr, lam, *, channels_per_weight: int = 1,
+def gspn_scan_fwd_pallas(x, wl, wc, wr, lam, *,
+                         spec: ScanSpec | None = None,
+                         channels_per_weight: int = 1,
                          chunk: int | None = None, row_tile: int | None = None,
                          interpret: bool = True, carry_dtype=jnp.float32,
                          pipeline_depth: int | None = None):
     """Fused forward line scan.  Returns h: (G, H, W) in x.dtype.
 
-    Streamed tiles take the operands' dtype; the VMEM carry row persists
-    in ``carry_dtype`` (f32 by default — the mixed-precision policy's
-    accumulator discipline, DESIGN.md §10).  ``pipeline_depth`` selects
-    the kernel structure (DESIGN.md §12): 1 walks planes × tiles with
-    per-row loads/stores (the classic stream); 2 blocks all planes into
-    each grid step and stages the streams in f32 — bulk widen on load,
-    one bulk downcast writeback — so narrow dtypes never pay a per-row
-    retiling penalty.  ``None`` resolves both the tile and the depth
-    through the autotuner (measured cache entry, heuristic fallback).
+    Configuration travels as ONE ``ScanSpec`` (DESIGN.md §14); the loose
+    keyword arguments survive as a legacy construction path used only
+    when ``spec`` is None.  Streamed tiles take the operands' dtype; the
+    VMEM carry row persists in ``spec.carry_dtype`` (f32 by default —
+    the mixed-precision policy's accumulator discipline, DESIGN.md §10).
+    ``spec.pipeline_depth`` selects the kernel structure (DESIGN.md §12):
+    1 walks planes × tiles with per-row loads/stores (the classic
+    stream); 2 blocks all planes into each grid step and stages the
+    streams in f32 — bulk widen on load, one bulk downcast writeback —
+    so narrow dtypes never pay a per-row retiling penalty.  ``None``
+    resolves both the tile and the depth through the autotuner (measured
+    cache entry keyed on the spec's canonical serialization, heuristic
+    fallback).
     """
     g, h, w = x.shape
-    cpw = channels_per_weight
+    if spec is None:
+        spec = ScanSpec(channels_per_weight=channels_per_weight,
+                        carry_dtype=str(jnp.dtype(carry_dtype)),
+                        row_tile=row_tile, pipeline_depth=pipeline_depth,
+                        interpret=interpret)
+    # Normalise the identity legs this kernel owns: it IS the pallas fwd
+    # entry, and it streams whatever dtype the operands carry.
+    spec = spec.with_(direction="fwd", impl="pallas",
+                      stream_dtype=str(jnp.dtype(x.dtype)))
+    cpw = spec.channels_per_weight
     gw = g // cpw
     assert wl.shape[0] * cpw == g, (wl.shape, g, cpw)
     chunk = h if chunk is None else chunk
     assert h % chunk == 0, (h, chunk)
-    carry_dtype = jnp.dtype(carry_dtype)
-    plan = autotune.plan_for(
-        min(h, chunk), w, c=g, direction="fwd", impl="pallas",
-        dtype=str(jnp.dtype(x.dtype)), carry_dtype=str(carry_dtype),
-        channel_shared=cpw > 1, interpret=interpret,
-        row_tile=row_tile, pipeline_depth=pipeline_depth)
+    carry_dtype = jnp.dtype(spec.carry_dtype)
+    interpret = spec.interpret
+    plan = autotune.plan_for_spec(spec, min(h, chunk), w, c=g)
     row_tile, pipeline_depth = plan.row_tile, plan.pipeline_depth
     assert chunk % row_tile == 0, (chunk, row_tile)
     assert pipeline_depth in (1, 2), pipeline_depth
@@ -368,7 +381,8 @@ def _bwd_kernel_staged(row_tile, chunk_tiles, cpw,
     g_ref[...] = jnp.swapaxes(ys, 0, 1).astype(g_ref.dtype)
 
 
-def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, channels_per_weight: int = 1,
+def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, spec: ScanSpec | None = None,
+                         channels_per_weight: int = 1,
                          chunk: int | None = None, row_tile: int | None = None,
                          interpret: bool = True,
                          pipeline_depth: int | None = None):
@@ -376,19 +390,23 @@ def gspn_scan_bwd_pallas(dy, wl, wc, wr, *, channels_per_weight: int = 1,
     here.  Returns g = dL/dh pre-output-layer: (G, H, W) f32.
     ``pipeline_depth=2`` is the staged pipeline (DESIGN.md §12)."""
     g_dim, h, w = dy.shape
-    cpw = channels_per_weight
+    if spec is None:
+        spec = ScanSpec(channels_per_weight=channels_per_weight,
+                        row_tile=row_tile, pipeline_depth=pipeline_depth,
+                        interpret=interpret)
+    # The streamed operands are dy + the three taps (their real dtype —
+    # bf16 streams unlock 2× larger row tiles); the adjoint carry is three
+    # f32 tap·adjoint rows regardless of the policy (the "bwd" direction
+    # leg encodes both the 5-stream count and the 3-row carry).
+    spec = spec.with_(direction="bwd", impl="pallas",
+                      stream_dtype=str(jnp.dtype(dy.dtype)),
+                      carry_dtype="float32")
+    cpw = spec.channels_per_weight
     gw = g_dim // cpw
     chunk = h if chunk is None else chunk
     assert h % chunk == 0, (h, chunk)
-    # The streamed operands are dy + the three taps (their real dtype —
-    # bf16 streams unlock 2× larger row tiles); the adjoint carry is three
-    # f32 tap·adjoint rows regardless of the policy (the tuner's "bwd"
-    # direction encodes both the 5-stream count and the 3-row carry).
-    plan = autotune.plan_for(
-        min(h, chunk), w, c=g_dim, direction="bwd", impl="pallas",
-        dtype=str(jnp.dtype(dy.dtype)), carry_dtype="float32",
-        channel_shared=cpw > 1, interpret=interpret,
-        row_tile=row_tile, pipeline_depth=pipeline_depth)
+    interpret = spec.interpret
+    plan = autotune.plan_for_spec(spec, min(h, chunk), w, c=g_dim)
     row_tile, pipeline_depth = plan.row_tile, plan.pipeline_depth
     assert pipeline_depth in (1, 2), pipeline_depth
     chunk_tiles = chunk // row_tile

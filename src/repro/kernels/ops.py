@@ -34,7 +34,6 @@ Pair-op operands carry a leading direction axis of size 2.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
@@ -44,25 +43,20 @@ from repro import obs
 from repro.kernels import gspn_multidir as _mk
 from repro.kernels import gspn_scan as _pk
 from repro.kernels import ref as _ref
+from repro.kernels.spec import ScanSpec
 
 
-@dataclasses.dataclass(frozen=True)
-class ScanConfig:
-    impl: str = "auto"           # auto | pallas | multidir | xla | per_step
-    channels_per_weight: int = 1
-    # None => each Pallas launch site resolves its tile through the
-    # autotuner (measured cache entry, VMEM-heuristic fallback —
-    # DESIGN.md §11); an explicit value always wins.
-    row_tile: int | None = None
-    interpret: bool = True
-    # Mixed-precision policy (DESIGN.md §10): streamed tiles take the
-    # operands' dtype; the VMEM carry row persists in carry_dtype.  Must
-    # stay hashable — ScanConfig is a nondiff custom_vjp argument.
-    carry_dtype: str = "float32"
-    # None => each Pallas launch resolves the staging depth through the
-    # autotuner (DESIGN.md §12); 1 forces the legacy revolving-buffer
-    # kernels, 2 the staged pipeline.
-    pipeline_depth: int | None = None
+def _base_spec(spec: ScanSpec | None, *, impl, row_tile, interpret,
+               carry_dtype, pipeline_depth, boundary) -> ScanSpec:
+    """One ScanSpec per public call (DESIGN.md §14): the caller's spec
+    verbatim, or one built from the legacy keyword arguments.  The spec
+    is the nondiff custom_vjp argument — frozen and hashable by
+    construction."""
+    if spec is not None:
+        return spec
+    return ScanSpec(impl=impl, row_tile=row_tile, interpret=interpret,
+                    carry_dtype=str(jnp.dtype(carry_dtype)),
+                    pipeline_depth=pipeline_depth, boundary=boundary)
 
 
 def _resolve_impl(impl: str) -> str:
@@ -86,18 +80,13 @@ def _resolve_pair_impl(impl: str) -> str:
     return impl
 
 
-def _fwd_dispatch(cfg: ScanConfig, x, wl, wc, wr, lam):
-    impl = _resolve_impl(cfg.impl)
+def _fwd_dispatch(spec: ScanSpec, x, wl, wc, wr, lam):
+    impl = _resolve_impl(spec.impl)
     # Traced-dispatch span (DESIGN.md §13): fires once per jit trace.
     with obs.trace("kernel.dispatch", op="gspn_scan", impl=impl,
                    dtype=str(jnp.dtype(x.dtype)), shape=str(x.shape)):
         if impl == "pallas":
-            return _pk.gspn_scan_fwd_pallas(
-                x, wl, wc, wr, lam,
-                channels_per_weight=cfg.channels_per_weight,
-                row_tile=cfg.row_tile, interpret=cfg.interpret,
-                carry_dtype=jnp.dtype(cfg.carry_dtype),
-                pipeline_depth=cfg.pipeline_depth)
+            return _pk.gspn_scan_fwd_pallas(x, wl, wc, wr, lam, spec=spec)
         if impl == "xla":
             return _ref.gspn_scan_ref(x, wl, wc, wr, lam)
         if impl == "per_step":
@@ -129,28 +118,26 @@ def _bwd_adjoint_xla(dy, wl_b, wc_b, wr_b, reverse: bool = True):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _gspn_core(cfg: ScanConfig, x, wl, wc, wr, lam):
-    return _fwd_dispatch(cfg, x, wl, wc, wr, lam)
+def _gspn_core(spec: ScanSpec, x, wl, wc, wr, lam):
+    return _fwd_dispatch(spec, x, wl, wc, wr, lam)
 
 
-def _gspn_core_fwd(cfg, x, wl, wc, wr, lam):
-    h = _fwd_dispatch(cfg, x, wl, wc, wr, lam)
+def _gspn_core_fwd(spec, x, wl, wc, wr, lam):
+    h = _fwd_dispatch(spec, x, wl, wc, wr, lam)
     return h, (x, wl, wc, wr, lam, h)
 
 
-def _gspn_core_bwd(cfg, res, dy):
+def _gspn_core_bwd(spec, res, dy):
     x, wl, wc, wr, lam, h = res
     g_dim = x.shape[0]
-    cpw = cfg.channels_per_weight
-    impl = _resolve_impl(cfg.impl)
+    cpw = spec.channels_per_weight
+    impl = _resolve_impl(spec.impl)
 
     with obs.trace("kernel.dispatch", op="gspn_scan_bwd", impl=impl,
                    dtype=str(jnp.dtype(dy.dtype)), shape=str(dy.shape)):
         if impl == "pallas":
-            g = _pk.gspn_scan_bwd_pallas(
-                dy, wl, wc, wr, channels_per_weight=cpw,
-                row_tile=cfg.row_tile, interpret=cfg.interpret,
-                pipeline_depth=cfg.pipeline_depth)
+            g = _pk.gspn_scan_bwd_pallas(dy, wl, wc, wr,
+                                         spec=spec.adjoint())
         else:
             wl_b = _ref._broadcast_w(wl, g_dim)
             wc_b = _ref._broadcast_w(wc, g_dim)
@@ -179,33 +166,41 @@ def _gspn_core_bwd(cfg, res, dy):
 _gspn_core.defvjp(_gspn_core_fwd, _gspn_core_bwd)
 
 
-def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
+def gspn_scan(x, wl, wc, wr, lam, *, spec: ScanSpec | None = None,
+              chunk: int | None = None,
               impl: str = "auto", row_tile: int | None = None,
               interpret: bool = True, mesh=None, seq_axis: str = "seq",
               sp_strategy: str = "auto", carry_dtype="float32",
-              sp_boundary_dtype=None, pipeline_depth: int | None = None):
+              sp_boundary_dtype=None, pipeline_depth: int | None = None,
+              boundary: str = "one_shot"):
     """GSPN line scan with optional GSPN-local chunking.
 
     x, lam: (G, H, W); wl/wc/wr: (G_w, H, W), G_w divides G.
     Returns h: (G, H, W) in x.dtype.  Differentiable in all tensor args.
-    ``mesh``/``seq_axis``/``sp_strategy``/``sp_boundary_dtype`` only apply
-    to ``impl="sp"``.  ``carry_dtype`` is the fused kernels' VMEM carry
-    dtype (f32 under the default policy, DESIGN.md §10);
-    ``pipeline_depth`` selects the kernel pipeline (DESIGN.md §12,
-    None = autotuned).
+    Configuration travels as ONE ``ScanSpec`` (DESIGN.md §14): pass
+    ``spec=`` directly, or let the legacy knob kwargs (``impl`` /
+    ``row_tile`` / ``interpret`` / ``carry_dtype`` / ``pipeline_depth``
+    / ``boundary``) build one — they are ignored when ``spec`` is given.
+    ``mesh``/``seq_axis``/``sp_strategy``/``sp_boundary_dtype`` are sp
+    ROUTING arguments (where the scan runs / the wire dtype), not scan
+    policy, so they stay outside the spec and only apply to
+    ``impl="sp"``.
     """
-    if impl == "sp":
+    spec = _base_spec(spec, impl=impl, row_tile=row_tile,
+                      interpret=interpret, carry_dtype=carry_dtype,
+                      pipeline_depth=pipeline_depth, boundary=boundary)
+    if spec.impl == "sp":
         from repro.parallel.gspn_sp import gspn_scan_sp
-        return gspn_scan_sp(x, wl, wc, wr, lam, mesh=mesh,
+        return gspn_scan_sp(x, wl, wc, wr, lam, spec=spec, mesh=mesh,
                             axis_name=seq_axis, strategy=sp_strategy,
-                            row_tile=row_tile, interpret=interpret,
-                            chunk=chunk, boundary_dtype=sp_boundary_dtype,
-                            carry_dtype=carry_dtype,
-                            pipeline_depth=pipeline_depth)
+                            chunk=chunk, boundary_dtype=sp_boundary_dtype)
     g, h, w = x.shape
     gw = wl.shape[0]
     assert g % gw == 0, (g, gw)
     cpw = g // gw
+    # Refine the shape/operand-derived legs the caller cannot know.
+    spec = spec.with_(direction="fwd",
+                      stream_dtype=str(jnp.dtype(x.dtype)))
 
     if chunk is not None and chunk != h:
         assert h % chunk == 0, (h, chunk)
@@ -219,19 +214,12 @@ def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
         def fold(a):
             return a.reshape(g * n, chunk, w)
 
-        cfg = ScanConfig(impl=impl, channels_per_weight=1,
-                         row_tile=row_tile, interpret=interpret,
-                         carry_dtype=str(jnp.dtype(carry_dtype)),
-                         pipeline_depth=pipeline_depth)
-        out = _gspn_core(cfg, fold(x), fold(wl_b), fold(wc_b), fold(wr_b),
-                         fold(lam))
+        out = _gspn_core(spec.with_(channels_per_weight=1), fold(x),
+                         fold(wl_b), fold(wc_b), fold(wr_b), fold(lam))
         return out.reshape(g, h, w)
 
-    cfg = ScanConfig(impl=impl, channels_per_weight=cpw,
-                     row_tile=row_tile, interpret=interpret,
-                     carry_dtype=str(jnp.dtype(carry_dtype)),
-                     pipeline_depth=pipeline_depth)
-    return _gspn_core(cfg, x, wl, wc, wr, lam)
+    return _gspn_core(spec.with_(channels_per_weight=cpw),
+                      x, wl, wc, wr, lam)
 
 
 # ---------------------------------------------------------------------------
@@ -243,17 +231,13 @@ def gspn_scan(x, wl, wc, wr, lam, *, chunk: int | None = None,
 #   out[1][i] = same recurrence with i-1 -> i+1   (bottom→top)
 # ---------------------------------------------------------------------------
 
-def _pair_fwd_dispatch(cfg: ScanConfig, x, wl2, wc2, wr2, lam2):
-    impl = _resolve_pair_impl(cfg.impl)
+def _pair_fwd_dispatch(spec: ScanSpec, x, wl2, wc2, wr2, lam2):
+    impl = _resolve_pair_impl(spec.impl)
     with obs.trace("kernel.dispatch", op="gspn_scan_pair", impl=impl,
                    dtype=str(jnp.dtype(x.dtype)), shape=str(x.shape)):
         if impl == "multidir":
             return _mk.gspn_scan_bidir_pallas(
-                x, {"wl": wl2, "wc": wc2, "wr": wr2}, lam2,
-                channels_per_weight=cfg.channels_per_weight,
-                row_tile=cfg.row_tile, interpret=cfg.interpret,
-                carry_dtype=jnp.dtype(cfg.carry_dtype),
-                pipeline_depth=cfg.pipeline_depth)
+                x, {"wl": wl2, "wc": wc2, "wr": wr2}, lam2, spec=spec)
         fwd = _ref.gspn_scan_ref(x, wl2[0], wc2[0], wr2[0], lam2[0])
         rev = _ref.gspn_scan_ref(x, wl2[1], wc2[1], wr2[1], lam2[1],
                                  reverse=True)
@@ -261,28 +245,26 @@ def _pair_fwd_dispatch(cfg: ScanConfig, x, wl2, wc2, wr2, lam2):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _gspn_pair_core(cfg: ScanConfig, x, wl2, wc2, wr2, lam2):
-    return _pair_fwd_dispatch(cfg, x, wl2, wc2, wr2, lam2)
+def _gspn_pair_core(spec: ScanSpec, x, wl2, wc2, wr2, lam2):
+    return _pair_fwd_dispatch(spec, x, wl2, wc2, wr2, lam2)
 
 
-def _gspn_pair_fwd(cfg, x, wl2, wc2, wr2, lam2):
-    h2 = _pair_fwd_dispatch(cfg, x, wl2, wc2, wr2, lam2)
+def _gspn_pair_fwd(spec, x, wl2, wc2, wr2, lam2):
+    h2 = _pair_fwd_dispatch(spec, x, wl2, wc2, wr2, lam2)
     return h2, (x, wl2, wc2, wr2, lam2, h2)
 
 
-def _gspn_pair_bwd(cfg, res, dy2):
+def _gspn_pair_bwd(spec, res, dy2):
     x, wl2, wc2, wr2, lam2, h2 = res
     g_dim = x.shape[0]
-    cpw = cfg.channels_per_weight
-    impl = _resolve_pair_impl(cfg.impl)
+    cpw = spec.channels_per_weight
+    impl = _resolve_pair_impl(spec.impl)
 
     with obs.trace("kernel.dispatch", op="gspn_scan_pair_bwd", impl=impl,
                    dtype=str(jnp.dtype(dy2.dtype)), shape=str(dy2.shape)):
         if impl == "multidir":
-            g2 = _mk.gspn_scan_bidir_bwd_pallas(
-                dy2, wl2, wc2, wr2, channels_per_weight=cpw,
-                row_tile=cfg.row_tile, interpret=cfg.interpret,
-                pipeline_depth=cfg.pipeline_depth)
+            g2 = _mk.gspn_scan_bidir_bwd_pallas(dy2, wl2, wc2, wr2,
+                                                spec=spec.adjoint())
         else:
             gs = []
             for d, reverse in ((0, True), (1, False)):
@@ -322,11 +304,13 @@ def _gspn_pair_bwd(cfg, res, dy2):
 _gspn_pair_core.defvjp(_gspn_pair_fwd, _gspn_pair_bwd)
 
 
-def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, chunk: int | None = None,
+def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, spec: ScanSpec | None = None,
+                   chunk: int | None = None,
                    impl: str = "auto", row_tile: int | None = None,
                    interpret: bool = True, mesh=None, seq_axis: str = "seq",
                    sp_strategy: str = "auto", carry_dtype="float32",
-                   sp_boundary_dtype=None, pipeline_depth: int | None = None):
+                   sp_boundary_dtype=None, pipeline_depth: int | None = None,
+                   boundary: str = "one_shot"):
     """Fused opposite-direction pair scan with optional GSPN-local chunking.
 
     x: (G, H, W) — SHARED by both directions; wl2/wc2/wr2: (2, G_w, H, W)
@@ -334,12 +318,19 @@ def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, chunk: int | None = None,
     axis -2, entry 1 bottom→top; all operands and outputs stay in the
     UNFLIPPED layout of x (the reverse traversal is index arithmetic inside
     the kernel, never a flipped copy).  Returns (2, G, H, W) in x.dtype.
-    Differentiable in all tensor args.
+    Differentiable in all tensor args.  As for :func:`gspn_scan`,
+    configuration travels as ONE ``ScanSpec`` — the knob kwargs are the
+    legacy construction path, ignored when ``spec`` is given.
     """
+    spec = _base_spec(spec, impl=impl, row_tile=row_tile,
+                      interpret=interpret, carry_dtype=carry_dtype,
+                      pipeline_depth=pipeline_depth, boundary=boundary)
     g, h, w = x.shape
     gw = wl2.shape[1]
     assert g % gw == 0, (g, gw)
     cpw = g // gw
+    spec = spec.with_(direction="pair_fwd",
+                      stream_dtype=str(jnp.dtype(x.dtype)))
 
     if chunk is not None and chunk != h:
         assert h % chunk == 0, (h, chunk)
@@ -354,16 +345,10 @@ def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, chunk: int | None = None,
         def fold2(a):          # (2, G, H, W) -> (2, G*n, chunk, W)
             return a.reshape(2, g * n, chunk, w)
 
-        cfg = ScanConfig(impl=impl, channels_per_weight=1,
-                         row_tile=row_tile, interpret=interpret,
-                         carry_dtype=str(jnp.dtype(carry_dtype)),
-                         pipeline_depth=pipeline_depth)
-        out = _gspn_pair_core(cfg, fold(x), fold2(wl_b), fold2(wc_b),
-                              fold2(wr_b), fold2(lam2))
+        out = _gspn_pair_core(spec.with_(channels_per_weight=1), fold(x),
+                              fold2(wl_b), fold2(wc_b), fold2(wr_b),
+                              fold2(lam2))
         return out.reshape(2, g, h, w)
 
-    cfg = ScanConfig(impl=impl, channels_per_weight=cpw,
-                     row_tile=row_tile, interpret=interpret,
-                     carry_dtype=str(jnp.dtype(carry_dtype)),
-                     pipeline_depth=pipeline_depth)
-    return _gspn_pair_core(cfg, x, wl2, wc2, wr2, lam2)
+    return _gspn_pair_core(spec.with_(channels_per_weight=cpw),
+                           x, wl2, wc2, wr2, lam2)

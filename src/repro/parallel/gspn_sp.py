@@ -73,6 +73,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat, obs
 from repro.kernels import gspn_scan as _pk
 from repro.kernels import ref as _ref
+from repro.kernels.spec import ScanSpec
 
 STRATEGIES = ("auto", "ppermute", "allgather")
 
@@ -83,32 +84,47 @@ PPERMUTE_MAX_BLOCKS = 4
 
 @dataclasses.dataclass(frozen=True)
 class SPConfig:
-    """Static (hashable) configuration of one sharded scan call."""
+    """Static (hashable) configuration of one sharded scan call.
+
+    Everything the block-LOCAL launch needs (inner impl, channel mode,
+    dtype policy, tile/pipeline, ``boundary="sp_block_local"``) lives in
+    the embedded :class:`ScanSpec` — the same object handed to the fused
+    kernel and through it to the autotuner, so the sp path shares the one
+    spec-keyed tuning cache (DESIGN.md §11/§14).  SPConfig itself only
+    adds the cross-device legs: mesh axis, block count, exchange strategy
+    and wire dtype.
+    """
     axis_name: str = "seq"
     n_blocks: int = 1
     strategy: str = "auto"
-    inner_impl: str = "xla"        # local-block forward kernel: pallas | xla
-    channels_per_weight: int = 1
-    row_tile: int | None = None
-    interpret: bool = True
-    # VMEM carry dtype of the block-local fused kernel (DESIGN.md §10);
-    # with row_tile=None it also keys the tuner lookup for the block-local
-    # launch (DESIGN.md §11), so the sp path shares the one tuning cache.
-    carry_dtype: str = "float32"
     # Wire dtype of the boundary exchange (DESIGN.md §10): the (T, b)
     # payloads are cast to this before every collective hop; the
     # associative composition itself always runs in f32.  bf16 halves the
-    # exchanged bytes — the one cross-device traffic of the scan.
+    # exchanged bytes — the one cross-device traffic of the scan.  Stays
+    # OUTSIDE the spec: it shapes the exchange, not the kernel launch.
     boundary_dtype: str = "float32"
-    # Pipeline depth of the block-local fused kernel (DESIGN.md §12);
-    # None lets the tuner pick.
-    pipeline_depth: int | None = None
+    # Block-local launch spec (impl resolved to a concrete kernel,
+    # boundary="sp_block_local").
+    spec: ScanSpec = ScanSpec(impl="xla", boundary="sp_block_local")
 
     def resolved_strategy(self) -> str:
         if self.strategy != "auto":
             return self.strategy
         return ("ppermute" if self.n_blocks <= PPERMUTE_MAX_BLOCKS
                 else "allgather")
+
+    # Compat views over the embedded spec.
+    @property
+    def inner_impl(self) -> str:
+        return self.spec.impl
+
+    @property
+    def channels_per_weight(self) -> int:
+        return self.spec.channels_per_weight
+
+    @property
+    def carry_dtype(self) -> str:
+        return self.spec.carry_dtype
 
 
 def _resolve_inner(inner_impl: str) -> str:
@@ -190,13 +206,8 @@ def propagate_boundary(b, wl, wc, wr, *, reverse: bool = False):
 
 def _local_scan(cfg: SPConfig, x, wl, wc, wr, lam, *, reverse: bool):
     """Block-local scan with zero incoming state (the existing kernels)."""
-    if not reverse and cfg.inner_impl == "pallas":
-        return _pk.gspn_scan_fwd_pallas(
-            x, wl, wc, wr, lam,
-            channels_per_weight=cfg.channels_per_weight,
-            row_tile=cfg.row_tile, interpret=cfg.interpret,
-            carry_dtype=jnp.dtype(cfg.carry_dtype),
-            pipeline_depth=cfg.pipeline_depth)
+    if not reverse and cfg.spec.impl == "pallas":
+        return _pk.gspn_scan_fwd_pallas(x, wl, wc, wr, lam, spec=cfg.spec)
     # Reverse-direction local scans (the adjoint pass) go through the XLA
     # fused-scan oracle — same recurrence, reversed row walk.
     return _ref.gspn_scan_ref(x, wl, wc, wr, lam, reverse=reverse)
@@ -361,7 +372,8 @@ _sp_core.defvjp(_sp_core_fwd, _sp_core_bwd)
 # Public entry point.
 # ---------------------------------------------------------------------------
 
-def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
+def gspn_scan_sp(x, wl, wc, wr, lam, *, spec: ScanSpec | None = None,
+                 mesh=None, axis_name: str = "seq",
                  strategy: str = "auto", inner_impl: str = "auto",
                  row_tile: int | None = None, interpret: bool = True,
                  chunk: int | None = None, batch_axes=None,
@@ -372,12 +384,16 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
     Same semantics and layout as :func:`repro.kernels.ops.gspn_scan` —
     x, lam: (G, H, W); wl/wc/wr: (G_w, H, W) — but the scan dimension H is
     partitioned into contiguous blocks over the ``axis_name`` mesh axis.
+    Launch policy arrives as one :class:`ScanSpec` (``spec=``); the
+    legacy loose kwargs (``inner_impl``/``row_tile``/``interpret``/
+    ``carry_dtype``/``pipeline_depth``) remain accepted when no spec is
+    given and are folded into one.  The block-local launch runs under
+    ``spec.with_(boundary="sp_block_local", impl=<resolved inner>)``.
     ``boundary_dtype`` (default f32) is the wire dtype of the boundary
     exchange payloads; composition always runs in f32 (DESIGN.md §10).
-    ``carry_dtype`` (default f32) is the block-local fused kernel's VMEM
-    carry dtype; it follows the active precision policy rather than a
-    hard-coded f32 so the tuner keys the block-local launch correctly
-    (DESIGN.md §11).
+    The spec's carry dtype follows the active precision policy rather
+    than a hard-coded f32 so the tuner keys the block-local launch
+    correctly (DESIGN.md §11).
     Differentiable in all tensor args (custom_vjp; the backward pass
     reverses the exchange direction).  H need not divide the axis size.
 
@@ -396,6 +412,12 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown sp strategy {strategy!r}")
+    if spec is None:
+        spec = ScanSpec(
+            impl=inner_impl, row_tile=row_tile, interpret=interpret,
+            carry_dtype=str(jnp.dtype(carry_dtype if carry_dtype is not None
+                                      else jnp.float32)),
+            pipeline_depth=pipeline_depth)
     mesh = mesh if mesh is not None else compat.ambient_mesh()
     n_seq = (mesh.shape[axis_name]
              if mesh is not None and axis_name in mesh.axis_names else 1)
@@ -404,11 +426,8 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
         # no cross-block state to exchange, so the chunked fused path is
         # already embarrassingly parallel and sp adds nothing to it.
         from repro.kernels.ops import gspn_scan
-        return gspn_scan(x, wl, wc, wr, lam, chunk=chunk, impl="auto",
-                         row_tile=row_tile, interpret=interpret,
-                         carry_dtype=(carry_dtype if carry_dtype is not None
-                                      else "float32"),
-                         pipeline_depth=pipeline_depth)
+        return gspn_scan(x, wl, wc, wr, lam, chunk=chunk,
+                         spec=spec.with_(impl="auto", boundary="one_shot"))
 
     g, h_dim, w = x.shape
     gw = wl.shape[0]
@@ -422,17 +441,18 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
             return jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
         x, wl, wc, wr, lam = map(pad_rows, (x, wl, wc, wr, lam))
 
+    # ``impl="sp"`` at this layer means "the sp wrapper itself" — the
+    # block-local kernel choice falls back to auto resolution.
+    inner = _resolve_inner("auto" if spec.impl in ("auto", "sp")
+                           else spec.impl)
     cfg = SPConfig(axis_name=axis_name, n_blocks=n_seq, strategy=strategy,
-                   inner_impl=_resolve_inner(inner_impl),
-                   channels_per_weight=g // gw, row_tile=row_tile,
-                   interpret=interpret,
-                   carry_dtype=str(jnp.dtype(
-                       carry_dtype if carry_dtype is not None
-                       else jnp.float32)),
                    boundary_dtype=str(jnp.dtype(
                        boundary_dtype if boundary_dtype is not None
                        else jnp.float32)),
-                   pipeline_depth=pipeline_depth)
+                   spec=spec.with_(direction="fwd", impl=inner,
+                                   channels_per_weight=g // gw,
+                                   stream_dtype=str(jnp.dtype(x.dtype)),
+                                   boundary="sp_block_local"))
     # Traced-launch accounting of the one boundary exchange (DESIGN.md
     # §13): analytic per-scan byte counts, recorded once per jit TRACE of
     # this call site (jit caching means executed steps reuse the trace).
@@ -467,9 +487,9 @@ def gspn_scan_sp(x, wl, wc, wr, lam, *, mesh=None, axis_name: str = "seq",
     bspec = None
     if bsize > 1 and g % bsize == 0 and gw % bsize == 0:
         bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
-    spec = P(bspec, axis_name, None)
+    pspec = P(bspec, axis_name, None)
     out = compat.shard_map(
         functools.partial(_sp_core, cfg), mesh=mesh,
-        in_specs=(spec,) * 5, out_specs=spec,
+        in_specs=(pspec,) * 5, out_specs=pspec,
     )(x, wl, wc, wr, lam)
     return out[:, :h_dim] if pad else out

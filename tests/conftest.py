@@ -3,6 +3,7 @@ CPU device; multi-device tests go through the ``run_sub`` fixture, which
 spawns subprocesses with their own flags (the device count must be forced
 BEFORE jax import, so it cannot be done in-process)."""
 
+import ast
 import subprocess
 import sys
 import textwrap
@@ -74,7 +75,20 @@ def run_sub():
         pytest.skip(f"8-device host-platform subprocess unavailable: {why}")
 
     def run(body: str, timeout: int = 560):
-        script = SUB_PRELUDE + textwrap.dedent(body)
+        dedented = textwrap.dedent(body)
+        # Guard against the silent-no-op failure mode: when a shared
+        # setup string is indented shallower than the test body, dedent
+        # strips only the common prefix and the body's statements end up
+        # NESTED inside the last setup def — syntactically valid, never
+        # executed, subprocess exits 0.  A real body always has at least
+        # one top-level statement that is not an import or a definition.
+        tree = ast.parse(dedented)
+        assert any(not isinstance(n, (ast.Import, ast.ImportFrom,
+                                      ast.FunctionDef, ast.ClassDef))
+                   for n in tree.body), (
+            "run_sub body has no top-level executable statements — "
+            "shared setup string indented shallower than the body?")
+        script = SUB_PRELUDE + dedented
         r = subprocess.run([sys.executable, "-c", script],
                            capture_output=True, text=True, timeout=timeout,
                            env=None)

@@ -1,17 +1,20 @@
 """Autotuner unit tests (DESIGN.md §11): cache round-trip and layering,
 graceful fallback to the static heuristic, deterministic measurement under
 an injected timer, VMEM-budget candidate admission (including the PR-4
-bf16-carry byte accounting), and the precision-policy routing of the
-static picker."""
+bf16-carry byte accounting), the precision-policy routing of the static
+picker, and the schema-3 spec-canonical keying with schema-2 read-compat
+(DESIGN.md §14)."""
 
 import json
 
 import jax.numpy as jnp
 import pytest
 
+from repro import obs
 from repro.configs.base import PRECISIONS, resolve_precision
 from repro.kernels import autotune as A
 from repro.kernels import tuning
+from repro.kernels.spec import ScanSpec
 
 pytestmark = pytest.mark.kernels
 
@@ -329,7 +332,7 @@ def test_pipeline_depth_cache_roundtrip(tmp_path):
     cache.store(key, entry)
     path = cache.save(tmp_path / "depth.json")
     payload = json.loads(path.read_text())
-    assert payload["schema"] == A.SCHEMA_VERSION == 2
+    assert payload["schema"] == A.SCHEMA_VERSION == 3
     fresh = A.TuningCache.load(path)
     assert fresh.lookup(key)["pipeline_depth"] == 2
     plan = A.plan_for(key.h, key.w, c=key.c, direction="fwd",
@@ -464,3 +467,137 @@ def test_depth2_candidates_respect_vmem_budget():
     # equal buffering is pinned in test_kernels); single-buffered
     # admission can stretch depth 1 even further ahead.
     assert max_d2 <= max_d1 // 2
+
+
+# ---------------------------------------------------------------------------
+# Schema 3: spec-canonical keys, boundary axis, schema-2 read-compat,
+# and the cache-reject observability signal (DESIGN.md §14).
+# ---------------------------------------------------------------------------
+
+def test_schema3_key_is_shape_legs_plus_spec_canonical():
+    key = _key(boundary="sp_block_local")
+    sp = ScanSpec(direction=key.direction, impl=key.impl,
+                  channels_per_weight=2, stream_dtype=key.dtype,
+                  carry_dtype=key.carry_dtype, boundary=key.boundary)
+    assert key.encode() == f"testdev|h64|w32|c4|{sp.canonical()}"
+    assert key.encode().endswith(sp.canonical())
+    # the legacy (schema-2) spelling carries no boundary leg
+    assert "bnd-" not in key.encode_legacy()
+    assert key.encode_legacy() == _key().encode_legacy()
+
+
+def test_scan_key_rejects_unknown_boundary():
+    with pytest.raises(ValueError):
+        _key(boundary="wraparound")
+
+
+def test_boundary_distinguishes_schema3_entries():
+    """Same shape+policy, different boundary behaviour => distinct cache
+    slots; each lookup finds its own entry."""
+    cache = A.TuningCache()
+    entry = {"row_tile": 16, "double_buffer": True, "pipeline_depth": 1,
+             "us": 1.0, "n_grid_steps": 4, "working_set_bytes": 64,
+             "source": "measured"}
+    k_one = _key(device=A.device_kind(False))
+    k_sp = _key(device=A.device_kind(False), boundary="sp_block_local")
+    cache.store(k_one, dict(entry, row_tile=16))
+    cache.store(k_sp, dict(entry, row_tile=8))
+    assert k_one.encode() != k_sp.encode()
+    assert cache.lookup(k_one)["row_tile"] == 16
+    assert cache.lookup(k_sp)["row_tile"] == 8
+
+
+def test_schema2_cache_file_read_compat(tmp_path):
+    """A schema-2 file (legacy 9-segment keys, no boundary leg) keeps
+    serving plans: the lookup falls back to the legacy encoding, and a
+    boundary-less entry serves every boundary mode."""
+    key = _key(device=A.device_kind(False))
+    entry = {"row_tile": 16, "double_buffer": True, "pipeline_depth": 1,
+             "us": 2.0, "n_grid_steps": 4, "working_set_bytes": 1024,
+             "source": "measured"}
+    payload = {"schema": 2, "entries": {key.encode_legacy(): entry}}
+    path = tmp_path / "schema2.json"
+    path.write_text(json.dumps(payload))
+    cache = A.TuningCache.load(path)
+    assert len(cache) == 1
+    for boundary in ("one_shot", "chunk_resume", "sp_block_local"):
+        plan = A.plan_for(key.h, key.w, c=key.c, direction="fwd",
+                          dtype="float32", channel_shared=True,
+                          cache=cache, boundary=boundary)
+        assert plan == A.ScanPlan(row_tile=16, pipeline_depth=1)
+
+
+def test_schema3_entry_shadows_legacy_fallback():
+    """When both spellings are present the schema-3 key wins — re-tuned
+    entries override the migrated legacy ones."""
+    key = _key(device=A.device_kind(False))
+    cache = A.TuningCache()
+    cache.entries[key.encode_legacy()] = {"row_tile": 8}
+    assert cache.lookup(key)["row_tile"] == 8       # legacy fallback
+    cache.store(key, {"row_tile": 16})
+    assert cache.lookup(key)["row_tile"] == 16      # v3 shadows it
+
+
+def test_seed_cache_stays_legacy_keyed_for_compat_coverage():
+    """The checked-in seed cache keeps schema-2 keys on purpose: every CI
+    run then exercises the legacy-fallback path against real entries."""
+    seed = A.TuningCache.load(A.SEED_CACHE_PATH)
+    assert len(seed) > 0
+    assert all("bnd-" not in k for k in seed.entries)
+
+
+def test_plan_for_spec_routes_spec_fields():
+    """plan_for_spec is plan_for with every leg drawn from the spec —
+    including the explicit tile/depth overrides."""
+    sp = ScanSpec(direction="fwd", impl="pallas", channels_per_weight=2,
+                  stream_dtype="bfloat16", row_tile=32, pipeline_depth=1)
+    assert A.plan_for_spec(sp, 64, 32, c=4) == A.ScanPlan(32, 1)
+    sp_auto = sp.with_(row_tile=None, pipeline_depth=None)
+    key = _key(device=A.device_kind(True), dtype="bfloat16")
+    assert A.plan_for_spec(sp_auto, 64, 32, c=4, cache=A.TuningCache()) \
+        == A.ScanPlan(A.heuristic_row_tile(key),
+                      A.heuristic_pipeline_depth(key))
+
+
+def test_invalid_cache_entry_emits_reject_counter_and_event():
+    """Satellite: a present-but-invalid entry must not fall through to
+    the heuristic silently — the reject increments a counter and logs an
+    event naming the key and the reason."""
+    obs.REGISTRY.reset()
+    key = _key(device=A.device_kind(False))
+    cache = A.TuningCache()
+    cache.store(key, {"row_tile": 128})             # does not divide h=64
+    before = obs.counter("autotune_cache_rejects_total").value
+    obs.enable()
+    try:
+        plan = A.plan_for(key.h, key.w, c=key.c, direction="fwd",
+                          dtype="float32", channel_shared=True,
+                          cache=cache)
+        rejects = [r for r in obs.records()
+                   if r.ph == "i" and r.name == "autotune.cache_reject"]
+    finally:
+        obs.disable()
+        obs.clear()
+    assert plan.row_tile == A.heuristic_row_tile(key)
+    assert obs.counter("autotune_cache_rejects_total").value == before + 1
+    assert rejects
+    assert rejects[0].args["key"] == key.encode()
+    assert "divide" in rejects[0].args["reason"]
+    # a clean miss (no entry at all) stays silent — no reject signal
+    obs.REGISTRY.reset()
+    A.plan_for(key.h, key.w, c=key.c, direction="fwd", dtype="float32",
+               channel_shared=True, cache=A.TuningCache())
+    assert obs.counter("autotune_cache_rejects_total").value == 0
+
+
+def test_entry_invalid_reason_strings():
+    key = _key()
+    reason = A._entry_invalid_reason
+    assert reason(key, {"row_tile": 16}) is None
+    assert "missing" in reason(key, {})
+    assert "power of two" in reason(key, {"row_tile": 3})
+    assert "divide" in reason(key, {"row_tile": 128})
+    assert "pipeline_depth" in reason(key, {"row_tile": 16,
+                                            "pipeline_depth": 7})
+    big = _key(h=1 << 20, w=8192)
+    assert "VMEM" in reason(big, {"row_tile": 1 << 19})

@@ -241,12 +241,70 @@ def test_gate_loader_rejects_malformed_reports(tmp_path):
     p.write_text(json.dumps({"rows": [{"name": "x"}]}))    # no us_per_call
     with pytest.raises(ValueError):
         gate.load_report(p)
-    p.write_text(json.dumps({"schema": 99, "rows": []}))
-    with pytest.raises(ValueError):
-        gate.load_report(p)
     p.write_text(json.dumps([1, 2, 3]))
     with pytest.raises(ValueError):
         gate.load_report(p)
+    # garbage schema values (non-int, bool, or below the supported range)
+    # are corruption, not version skew — plain ValueError, never the
+    # forward-compat subclass
+    for schema in ("2", None, 0, -1):
+        p.write_text(json.dumps({"schema": schema, "rows": []}))
+        with pytest.raises(ValueError) as ei:
+            gate.load_report(p)
+        assert not isinstance(ei.value, gate.UnsupportedSchemaError), schema
+
+
+# ---------------------------------------------------------------------------
+# Forward-compat: a report schema NEWER than the gate knows must warn and
+# skip (exit 0), never crash CI — the gate binary that predates a schema
+# bump cannot gate the new reports, and a wedged gate blocks every PR.
+# ---------------------------------------------------------------------------
+
+def test_loader_raises_typed_error_on_newer_schema(tmp_path):
+    p = tmp_path / "future.json"
+    p.write_text(json.dumps({"schema": max(gate.SUPPORTED_SCHEMAS) + 1,
+                             "rows": []}))
+    with pytest.raises(gate.UnsupportedSchemaError) as ei:
+        gate.load_report(p)
+    assert "newer than this gate supports" in str(ei.value)
+    # the subclass is still a ValueError, so pre-existing callers that
+    # catch ValueError keep working
+    assert isinstance(ei.value, ValueError)
+
+
+def test_cli_warn_skips_on_newer_current_schema(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", BASE)
+    future = json.loads(json.dumps(BASE))
+    future["schema"] = 99
+    future["rows"][0]["us_per_call"] *= 100.0       # would be a regression
+    cur = _write(tmp_path, "future.json", future)
+    assert gate.main(["--baseline", base, "--current", cur]) == 0
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "schema 99" in out and "skipping gate" in out
+    assert "REGRESSION" not in out
+
+
+def test_cli_warn_skips_on_newer_baseline_schema(tmp_path, capsys):
+    future = json.loads(json.dumps(BASE))
+    future["schema"] = 99
+    base = _write(tmp_path, "future_base.json", future)
+    cur = _write(tmp_path, "cur.json", BASE)
+    assert gate.main(["--baseline", base, "--current", cur]) == 0
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "skipping gate" in out
+
+
+def test_update_refuses_to_enshrine_newer_schema(tmp_path, capsys):
+    """--update with an unreadable-future current report must warn-skip
+    WITHOUT overwriting the baseline."""
+    base = _write(tmp_path, "base.json", BASE)
+    future = json.loads(json.dumps(BASE))
+    future["schema"] = 99
+    cur = _write(tmp_path, "future.json", future)
+    assert gate.main(["--baseline", base, "--current", cur,
+                      "--update"]) == 0
+    assert "skipping gate" in capsys.readouterr().out
+    assert json.loads(pathlib.Path(base).read_text()) == BASE
 
 
 def test_duplicate_rung_names_keep_last():

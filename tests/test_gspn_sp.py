@@ -22,28 +22,32 @@ pytestmark = pytest.mark.distributed
 # Shared by the equivalence bodies: direction-stacked inputs in ORIGINAL
 # orientation (taps generated per oriented geometry, like the attention
 # module does), plus a scalarising loss for gradient comparison.
+# MUST be indented to the same depth as the run_sub bodies (8 spaces):
+# textwrap.dedent runs over the concatenation, and a shallower setup
+# would leave the body nested inside the last def here — a silent no-op
+# (conftest.run_sub now rejects such bodies structurally).
 _SETUP = """
-    from repro.core import gspn as G
+        from repro.core import gspn as G
 
-    def inputs(b, cp, h, w, seed=0):
-        g = b * cp
-        nd = len(G.DIRECTIONS)
-        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-        x = jax.random.normal(ks[0], (g, h, w))
-        lam = jax.nn.sigmoid(jax.random.normal(ks[1], (nd, g, h, w)))
-        logits = jax.random.normal(ks[2], (nd, b, h, w, 3))
-        taps = [G._normalize_taps_oriented(logits[i], d, "softmax")
-                for i, d in enumerate(G.DIRECTIONS)]
-        wl, wc, wr = (jnp.stack([t[k] for t in taps]) for k in range(3))
-        return x, wl, wc, wr, lam
+        def inputs(b, cp, h, w, seed=0):
+            g = b * cp
+            nd = len(G.DIRECTIONS)
+            ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+            x = jax.random.normal(ks[0], (g, h, w))
+            lam = jax.nn.sigmoid(jax.random.normal(ks[1], (nd, g, h, w)))
+            logits = jax.random.normal(ks[2], (nd, b, h, w, 3))
+            taps = [G._normalize_taps_oriented(logits[i], d, "softmax")
+                    for i, d in enumerate(G.DIRECTIONS)]
+            wl, wc, wr = (jnp.stack([t[k] for t in taps]) for k in range(3))
+            return x, wl, wc, wr, lam
 
-    def loss(fn):
-        return lambda *a: jnp.sum(jnp.sin(fn(*a)))
+        def loss(fn):
+            return lambda *a: jnp.sum(jnp.sin(fn(*a)))
 
-    def check_tree(got, want, rtol, atol):
-        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       rtol=rtol, atol=atol)
+        def check_tree(got, want, rtol, atol):
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=rtol, atol=atol)
 """
 
 
@@ -103,6 +107,45 @@ def test_sp_non_compact_and_divisible_blocks(run_sub):
                 *args)
             g_ref = jax.grad(loss(ref_fn), argnums=(0, 1, 2, 3, 4))(*args)
             check_tree(g_sp, g_ref, 1e-4, 1e-5)
+    """, timeout=560)
+
+
+def test_sp_backward_compact_nondivisible_grid_edges(run_sub):
+    """The cell the suite used to skip: sp BACKWARD under compact channel
+    mode (cpw=3) with block sizes that do NOT divide the 8-way mesh, probed
+    at BOTH grid edges — a loss reading only the first or only the last
+    row.  Edge rows are where block-local padding and the boundary carry
+    injection meet: row 0 of block 0 has no incoming carry, the last row
+    lives in a partially-padded block (h=19 → h_blk=3, last block is pure
+    padding; h=9 → h_blk=2, three trailing blocks are pure padding), so a
+    cotangent concentrated there must flow back through the exchange chain
+    without picking up padded-lane garbage.  Both strategies, all five
+    gradients, against the reference scan."""
+    run_sub(_SETUP + """
+        from repro.kernels.ref import gspn_scan_ref
+        from repro.parallel.gspn_sp import gspn_scan_sp
+
+        mesh = make_mesh((8,), ("seq",))
+        gw, cpw, w = 2, 3, 8
+        g = gw * cpw
+        for h in (19, 9):
+            ks = jax.random.split(jax.random.PRNGKey(h), 3)
+            x = jax.random.normal(ks[0], (g, h, w))
+            lam = jax.nn.sigmoid(jax.random.normal(ks[1], (g, h, w)))
+            wl, wc, wr = G.normalize_taps(
+                jax.random.normal(ks[2], (gw, h, w, 3)))
+            args = (x, wl, wc, wr, lam)
+            for row in (0, h - 1):
+                edge = lambda fn, row=row: (
+                    lambda *a: jnp.sum(jnp.sin(fn(*a)[:, row])))
+                g_ref = jax.grad(edge(gspn_scan_ref),
+                                 argnums=(0, 1, 2, 3, 4))(*args)
+                for strategy in ("ppermute", "allgather"):
+                    sp_fn = lambda *a, s=strategy: gspn_scan_sp(
+                        *a, mesh=mesh, strategy=s)
+                    g_sp = jax.jit(jax.grad(edge(sp_fn),
+                                            argnums=(0, 1, 2, 3, 4)))(*args)
+                    check_tree(g_sp, g_ref, 1e-4, 1e-5)
     """, timeout=560)
 
 
@@ -193,10 +236,35 @@ def test_sp_hybrid_data_seq_mesh(run_sub):
             x, wl, wc, wr, lam)
         check_tree(g_sp, g_ref, 1e-4, 1e-5)
 
-        # the output really is data×seq sharded, not replicated-G
-        from jax.sharding import PartitionSpec as P
-        assert jax.jit(sp_fn).lower(x, wl, wc, wr, lam).compile()\\
-            .output_shardings.spec == P("data", "seq", None)
+        # G is never gathered to replicate: no collective moves a full
+        # activation payload — only boundary columns and the transfer
+        # operator cross devices.  (An output-sharding pin is impossible
+        # here: h=21 cannot lay out on the 4-way seq axis at all, so jit
+        # is free to replicate the reassembled output.)
+        def collective_payloads(fn, *args):
+            found = []
+            def walk(jaxpr):
+                for eqn in jaxpr.eqns:
+                    nm = eqn.primitive.name
+                    if ("all_gather" in nm or "psum" in nm
+                            or nm in ("ppermute", "all_to_all", "pgather")):
+                        found.extend(tuple(v.aval.shape)
+                                     for v in eqn.invars)
+                    for v in eqn.params.values():
+                        vs = v if isinstance(v, (list, tuple)) else [v]
+                        for j in vs:
+                            if hasattr(j, "jaxpr"):
+                                walk(j.jaxpr)
+                            elif hasattr(j, "eqns"):
+                                walk(j)
+            walk(jax.make_jaxpr(fn)(*args).jaxpr)
+            return found
+
+        h_blk = -(-h // 4)
+        payloads = collective_payloads(sp_fn, x, wl, wc, wr, lam)
+        assert payloads, "expected at least the boundary exchange"
+        for shp in payloads:
+            assert shp not in ((g, h_blk, w), (g, h, w)), payloads
     """, timeout=560)
 
 

@@ -1,0 +1,130 @@
+"""Chunked-prefill resume vs one-shot (DESIGN.md §9 / §14).
+
+The serve contract: chaining ``gspn_seq_prefill_chunk`` over any admissible
+chunking — all chunks but the last row-aligned, head and tail as ragged as
+the contract allows — reproduces the one-shot mixer to 1e-5, output AND
+outgoing O(W) cache.  The ScanSpec ``boundary`` leg is pure autotune-cache
+policy: forcing any of the three labels through every launch in the chain
+must not move a ULP of the result, pinned both through the mixer chain and
+directly on ``gspn_scan``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gspn as G
+from repro.kernels.ops import gspn_scan
+from repro.kernels.spec import BOUNDARIES, ScanSpec
+
+pytestmark = pytest.mark.serve
+
+B, CP, DIM, W = 2, 4, 12, 8
+
+# Admissible chunkings of the token stream (chunk lengths; every chunk but
+# the last covers whole grid rows of width W):
+CHUNKINGS = {
+    "head_single_row_ragged_tail": [W, 3 * W, 2 * W + 3],
+    "uneven_rows_tiny_tail": [2 * W, W, W, 5],
+    "single_partial_row": [3],              # head == tail, shorter than W
+    "tail_on_row_boundary": [W, 2 * W],     # cache must match EXACTLY
+    "every_row_its_own_chunk": [W] * 4 + [1],
+}
+
+
+def _fresh_cache(w=W):
+    return {"prev_row": jnp.zeros((B, CP, w)),
+            "cur_row": jnp.zeros((B, CP, w)),
+            "row_state": jnp.zeros((B, CP)),
+            "pos": jnp.zeros((B,), jnp.int32)}
+
+
+def _mixer(w=W, seed=0):
+    cfg = G.GSPNSeqConfig(dim=DIM, proxy_dim=CP, row_width=w, impl="xla")
+    params = G.init_gspn_seq_mixer(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def _chain(params, x, cfg, chunks):
+    cache = _fresh_cache(cfg.row_width)
+    ys, lo = [], 0
+    for t in chunks:
+        y, cache = G.gspn_seq_prefill_chunk(params, x[:, lo:lo + t],
+                                            cfg, cache)
+        ys.append(y)
+        lo += t
+    return jnp.concatenate(ys, axis=1), cache
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("name", sorted(CHUNKINGS))
+def test_chunk_chain_equals_oneshot_under_every_boundary(name, boundary,
+                                                         monkeypatch):
+    """Ragged head/tail resume ≡ one-shot at 1e-5 with EVERY ScanSpec
+    boundary label forced through every scan launch in the chain — the
+    label keys the autotune cache but must never touch numerics."""
+    orig = G._scan_spec_kwargs
+
+    def forced(cfg, mesh, **kw):
+        out = orig(cfg, mesh, **kw)
+        out["spec"] = out["spec"].with_(boundary=boundary)
+        return out
+
+    monkeypatch.setattr(G, "_scan_spec_kwargs", forced)
+
+    chunks = CHUNKINGS[name]
+    total = sum(chunks)
+    cfg, params = _mixer()
+    x = jax.random.normal(jax.random.PRNGKey(hash(name) % 1000),
+                          (B, total, DIM))
+
+    ref, ref_cache = G.apply_gspn_seq_mixer(params, x, cfg,
+                                            return_cache=True)
+    got, cache = _chain(params, x, cfg, chunks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5, err_msg=name)
+    # The outgoing O(W) cache is part of the contract too — a later
+    # decode step resumes from it.
+    assert int(cache["pos"][0]) == total
+    for leg in ("prev_row", "cur_row", "row_state"):
+        np.testing.assert_allclose(np.asarray(cache[leg]),
+                                   np.asarray(ref_cache[leg]),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{name}/{leg}")
+
+
+def test_head_chunk_as_small_as_the_contract_allows():
+    """The minimal admissible HEAD chunk is one grid row (the contract
+    forbids a non-final mid-row chunk); one row of state must be enough
+    to seed everything downstream."""
+    cfg, params = _mixer(seed=7)
+    total = 5 * W + 2
+    x = jax.random.normal(jax.random.PRNGKey(11), (B, total, DIM))
+    ref = G.apply_gspn_seq_mixer(params, x, cfg)
+    got, _ = _chain(params, x, cfg, [W, W, W, W, W, 2])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_boundary_label_is_numerically_inert_on_gspn_scan(impl):
+    """Directly on the kernel entry: the three boundary labels produce
+    BITWISE-identical forwards (and matching grads) — boundary is cache
+    policy, not a numeric knob."""
+    g, h, w = 4, 12, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(ks[0], (g, h, w))
+    lam = jax.nn.sigmoid(jax.random.normal(ks[1], (g, h, w)))
+    wl, wc, wr = G.normalize_taps(jax.random.normal(ks[2], (g, h, w, 3)))
+
+    outs, grads = [], []
+    for bnd in BOUNDARIES:
+        sp = ScanSpec(impl=impl, boundary=bnd)
+        fn = lambda *a, sp=sp: gspn_scan(*a, spec=sp)
+        outs.append(np.asarray(fn(x, wl, wc, wr, lam)))
+        grads.append(np.asarray(jax.grad(
+            lambda *a: jnp.sum(jnp.sin(fn(*a))))(x, wl, wc, wr, lam)))
+    for o, gr in zip(outs[1:], grads[1:]):
+        np.testing.assert_array_equal(o, outs[0])
+        np.testing.assert_array_equal(gr, grads[0])
