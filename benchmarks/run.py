@@ -58,27 +58,21 @@ def build_payload(rows, *, smoke: bool, only=None, failed=(),
 
 
 def main() -> None:
+    from repro.launch import args as largs
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--smoke", action="store_true",
                     help="1 timed iteration per rung (CI smoke gate)")
     ap.add_argument("--json", default="",
                     help="also write rows to this JSON file (CI artifact)")
-    ap.add_argument("--trace-out", default="",
-                    help="write a Chrome trace-event JSON of the sweep "
-                         "(per-module bench.<key> spans + kernel-launch "
-                         "spans; DESIGN.md §13)")
-    ap.add_argument("--metrics-out", default="",
-                    help="write the metrics-registry snapshot here "
-                         "(.prom => Prometheus text, else JSON)")
+    largs.add_observability_args(ap)
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     from repro import obs
     import benchmarks.common as common
     if args.smoke:
         common.SMOKE = True
-    if args.trace_out:
-        obs.enable()
+    largs.setup_observability(args)
 
     print("name,us_per_call,derived")
     failed = []

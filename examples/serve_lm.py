@@ -67,9 +67,9 @@ def main():
                         min(8, args.max_new), args.max_new + 1)))
             for i in range(args.requests)]
 
-    dt = drive(eng, reqs, arrivals, idle_sleep=0.005)
+    dt, handles = drive(eng, reqs, arrivals, idle_sleep=0.005)
 
-    results = eng.results
+    results = {h.uid: h.result() for h in handles if h.done}
     if not results:
         print("served 0 requests")
         return

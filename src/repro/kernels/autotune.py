@@ -11,7 +11,7 @@ winner to a JSON cache keyed by everything that changes the optimum —
     (device_kind, H, W, C, direction, impl, stream dtype, carry dtype,
      channel_shared)
 
-Resolution order at every launch site (``row_tile_for``):
+Resolution order at every launch site (``plan_for_spec``):
 
 1. an explicit ``row_tile=`` argument always wins (never consults us);
 2. a cache hit — env-overridable path (``GSPN_TUNE_CACHE``) layered over
@@ -404,31 +404,30 @@ def _entry_valid(key: ScanKey, entry: dict, *,
     return _entry_invalid_reason(key, entry, vmem_budget=vmem_budget) is None
 
 
-def plan_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
-             impl: str = "pallas", dtype="float32",
-             carry_dtype="float32", channel_shared: bool = False,
-             interpret: bool = False, cache: TuningCache | None = None,
-             cap: int = DEFAULT_CAP, row_tile: int | None = None,
-             pipeline_depth: int | None = None,
-             boundary: str = "one_shot") -> ScanPlan:
-    """THE launch-site entry point: tuned ``(row_tile, pipeline_depth)``
-    if the cache knows this (device, shape, direction, dtype-policy,
-    boundary) key, heuristic otherwise.  Explicit ``row_tile`` /
-    ``pipeline_depth`` arguments always win; an explicit tile bypasses
-    the cache entirely (a measured entry's depth belongs to the tile it
-    was measured with) and takes the heuristic depth unless one is given.
+def plan_for_spec(spec: ScanSpec, h: int, w: int, *, c: int = 0,
+                  cache: TuningCache | None = None,
+                  cap: int = DEFAULT_CAP) -> ScanPlan:
+    """THE launch-site planning entry point: tuned ``(row_tile,
+    pipeline_depth)`` if the cache knows this (device, shape, spec-policy)
+    key, heuristic otherwise.  The cache key is the spec's canonical
+    serialization (``ScanKey.encode`` ends with ``spec.canonical()``)
+    plus the device and shape legs.  The spec's explicit ``row_tile`` /
+    ``pipeline_depth`` fields always win; an explicit tile bypasses the
+    cache entirely (a measured entry's depth belongs to the tile it was
+    measured with) and takes the heuristic depth unless one is given.
 
     Every fused-scan launch (fwd, bwd, pair, quad — and through them the
     chunked-prefill and sp block-local paths) funnels here, so one cache
-    governs the whole stack.  Launch sites reach this through
-    :func:`plan_for_spec`."""
-    key = ScanKey(device_kind(interpret), h, w, c, direction, impl,
-                  str(jnp.dtype(dtype)), str(jnp.dtype(carry_dtype)),
-                  bool(channel_shared), boundary)
-    if row_tile is not None:
-        depth = (heuristic_pipeline_depth(key) if pipeline_depth is None
-                 else pipeline_depth)
-        plan = ScanPlan(row_tile, depth)
+    governs the whole stack.  The kwargs-style :func:`plan_for` survives
+    only as a deprecation shim over this function."""
+    key = ScanKey(device_kind(spec.interpret), h, w, c, spec.direction,
+                  spec.impl, str(jnp.dtype(spec.stream_dtype)),
+                  str(jnp.dtype(spec.carry_dtype)),
+                  spec.channel_shared, spec.boundary)
+    if spec.row_tile is not None:
+        depth = (heuristic_pipeline_depth(key) if spec.pipeline_depth is None
+                 else spec.pipeline_depth)
+        plan = ScanPlan(spec.row_tile, depth)
         _record_plan(key, plan, "explicit")
         return plan
     cache = cache if cache is not None else get_cache()
@@ -450,28 +449,56 @@ def plan_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
         depth = heuristic_pipeline_depth(key)
         t = heuristic_row_tile(key, cap=cap, pipeline_depth=depth)
         source = "heuristic"
-    if pipeline_depth is not None:
-        depth = pipeline_depth
+    if spec.pipeline_depth is not None:
+        depth = spec.pipeline_depth
     plan = ScanPlan(t, depth)
     _record_plan(key, plan, source)
     return plan
 
 
-def plan_for_spec(spec: ScanSpec, h: int, w: int, *, c: int = 0,
-                  cache: TuningCache | None = None,
-                  cap: int = DEFAULT_CAP) -> ScanPlan:
-    """Spec-keyed view of :func:`plan_for` — the launch-site entry point
-    since schema 3.  The cache key is the spec's canonical serialization
-    (``ScanKey.encode`` ends with ``spec.canonical()``) plus the device
-    and shape legs; the spec's explicit ``row_tile`` / ``pipeline_depth``
-    act as the overriding arguments."""
-    return plan_for(h, w, c=c, direction=spec.direction, impl=spec.impl,
-                    dtype=spec.stream_dtype, carry_dtype=spec.carry_dtype,
-                    channel_shared=spec.channel_shared,
-                    interpret=spec.interpret, cache=cache, cap=cap,
-                    row_tile=spec.row_tile,
-                    pipeline_depth=spec.pipeline_depth,
-                    boundary=spec.boundary)
+# Warn-once latch for the deprecated kwargs-style entry points.  Module
+# state (not functools caching) so a test can reset it explicitly.
+_plan_for_warned = False
+
+
+def _spec_from_kwargs(direction, impl, dtype, carry_dtype, channel_shared,
+                      interpret, row_tile, pipeline_depth,
+                      boundary) -> ScanSpec:
+    """Fold the legacy loose-kwargs planning surface into a ScanSpec.
+    ``channel_shared`` is a bool in the old surface; the spec carries the
+    actual channel count, but only the >1 bit reaches the cache key, so
+    any shared count reproduces the legacy key exactly."""
+    return ScanSpec(direction=direction, impl=impl,
+                    channels_per_weight=2 if channel_shared else 1,
+                    stream_dtype=str(jnp.dtype(dtype)),
+                    carry_dtype=str(jnp.dtype(carry_dtype)),
+                    row_tile=row_tile, pipeline_depth=pipeline_depth,
+                    boundary=boundary, interpret=interpret)
+
+
+def plan_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
+             impl: str = "pallas", dtype="float32",
+             carry_dtype="float32", channel_shared: bool = False,
+             interpret: bool = False, cache: TuningCache | None = None,
+             cap: int = DEFAULT_CAP, row_tile: int | None = None,
+             pipeline_depth: int | None = None,
+             boundary: str = "one_shot") -> ScanPlan:
+    """DEPRECATED kwargs-style shim over :func:`plan_for_spec` — builds
+    the equivalent ScanSpec and forwards.  Kept so pre-spec callers keep
+    resolving identical plans (pinned by tests/test_autotune.py); new
+    code should construct a :class:`ScanSpec` and call
+    :func:`plan_for_spec`.  Warns once per process."""
+    global _plan_for_warned
+    if not _plan_for_warned:
+        _plan_for_warned = True
+        import warnings
+        warnings.warn(
+            "autotune.plan_for is deprecated; construct a ScanSpec and "
+            "call plan_for_spec", DeprecationWarning, stacklevel=2)
+    spec = _spec_from_kwargs(direction, impl, dtype, carry_dtype,
+                             channel_shared, interpret, row_tile,
+                             pipeline_depth, boundary)
+    return plan_for_spec(spec, h, w, c=c, cache=cache, cap=cap)
 
 
 def row_tile_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
@@ -479,11 +506,12 @@ def row_tile_for(h: int, w: int, *, c: int = 0, direction: str = "fwd",
                  carry_dtype="float32", channel_shared: bool = False,
                  interpret: bool = False, cache: TuningCache | None = None,
                  cap: int = DEFAULT_CAP) -> int:
-    """Tile-only view of :func:`plan_for` (kept for callers that manage
-    the pipeline structure themselves)."""
-    return plan_for(h, w, c=c, direction=direction, impl=impl, dtype=dtype,
-                    carry_dtype=carry_dtype, channel_shared=channel_shared,
-                    interpret=interpret, cache=cache, cap=cap).row_tile
+    """Tile-only view of :func:`plan_for_spec` (kept for callers that
+    manage the pipeline structure themselves)."""
+    spec = _spec_from_kwargs(direction, impl, dtype, carry_dtype,
+                             channel_shared, interpret, None, None,
+                             "one_shot")
+    return plan_for_spec(spec, h, w, c=c, cache=cache, cap=cap).row_tile
 
 
 # ---------------------------------------------------------------------------

@@ -58,7 +58,7 @@ def pick_row_tile(h: int, cap: int = DEFAULT_ROW_TILE, *, w: int = 128,
     power-of-two divisor of ``h`` not exceeding ``cap`` whose streamed
     working set fits the VMEM budget.  ``dtype_bytes`` is the STREAMED
     dtype; ``carry_dtype_bytes`` the VMEM carry's.  Launch sites no longer
-    call this directly — they go through ``autotune.plan_for``, which
+    call this directly — they go through ``autotune.plan_for_spec``, which
     prefers a measured cache entry and falls back to this accounting
     (DESIGN.md §11/§12).
     """

@@ -1,0 +1,111 @@
+"""Shared launcher flag plumbing (DESIGN.md §15).
+
+The same knobs — kernel impl, mixed precision, at-rest state dtype,
+tuning cache, trace/metrics output, and now the serving-tier router —
+kept growing copy-pasted ``add_argument`` blocks across
+``launch/serve.py``, ``launch/train.py`` and ``benchmarks/run.py``,
+which is exactly how flag help text and defaults drift.  Each group is
+defined ONCE here as an ``add_*_args(parser)`` helper plus the matching
+apply-side function, so a new knob (e.g. ``--replicas``) lands in every
+entry point by construction.
+
+The helpers only add flags; the launchers keep their own entry-specific
+arguments and call the apply-side functions (``setup_observability`` /
+``load_tune_cache`` / ``finish_observability``) at the right points in
+their lifecycle.
+"""
+
+from __future__ import annotations
+
+from repro import obs
+from repro.configs.base import PRECISIONS
+
+
+# -- flag groups -------------------------------------------------------------
+
+def add_observability_args(ap):
+    """``--trace-out`` / ``--metrics-out`` (DESIGN.md §13)."""
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run here "
+                         "(open in Perfetto / chrome://tracing; "
+                         "DESIGN.md §13)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics-registry snapshot here "
+                         "(.prom => Prometheus text, else JSON; "
+                         "DESIGN.md §13)")
+
+
+def add_tuning_args(ap):
+    """``--tune-cache`` (DESIGN.md §11)."""
+    ap.add_argument("--tune-cache", default="",
+                    help="kernel tuning cache JSON (DESIGN.md §11), "
+                         "layered over the checked-in seed cache; every "
+                         "GSPN launch then uses measured row tiles "
+                         "instead of the VMEM heuristic")
+
+
+def add_impl_arg(ap):
+    """``--impl`` — the GSPN kernel-selection knob."""
+    ap.add_argument("--impl", default="",
+                    help="override the GSPN kernel impl= knob "
+                         "(auto|pallas|multidir|xla|sp)")
+
+
+def add_precision_args(ap, *, state_dtype: bool = False):
+    """``--precision`` (and optionally ``--state-dtype``), DESIGN.md §10."""
+    ap.add_argument("--precision", default="",
+                    choices=[""] + sorted(PRECISIONS),
+                    help="mixed-precision policy "
+                         "(params/compute/carries, DESIGN.md §10)")
+    if state_dtype:
+        ap.add_argument("--state-dtype", default="",
+                        choices=["", "f32", "bf16"],
+                        help="at-rest dtype of the pooled propagation "
+                             "state (bf16 halves pool bytes, "
+                             "DESIGN.md §10)")
+
+
+def add_router_args(ap):
+    """Serving-tier knobs: ``--replicas/--router/--prefix-cache/--slo-ttft``
+    (DESIGN.md §15)."""
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the router (1 = a bare "
+                         "engine, no router tier)")
+    ap.add_argument("--router", default="least_loaded",
+                    choices=["least_loaded", "ttft"],
+                    help="admission policy: fewest in-flight requests, or "
+                         "TTFT-predictive (work-ahead x measured per-chunk "
+                         "latency, DESIGN.md §15)")
+    ap.add_argument("--prefix-cache", type=int, default=0,
+                    help="capacity (entries) of the shared prefix/state "
+                         "cache; 0 disables prefix reuse")
+    ap.add_argument("--slo-ttft", type=float, default=0.5,
+                    help="TTFT SLO in seconds; admissions predicted to "
+                         "miss it count router_slo_at_risk_total")
+
+
+# -- apply side --------------------------------------------------------------
+
+def setup_observability(args):
+    """Enable tracing BEFORE model build so jit-trace-time spans (kernel
+    dispatch/launch, autotune plan resolution) are captured."""
+    if args.trace_out:
+        obs.enable()
+
+
+def finish_observability(args, tag: str):
+    """Write the trace/metrics artifacts named by the flags (no-ops when
+    the flags are unset)."""
+    if args.trace_out:
+        print(f"[{tag}] trace: {obs.save_chrome_trace(args.trace_out)} "
+              f"({len(obs.records())} events)")
+    if args.metrics_out:
+        print(f"[{tag}] metrics: {obs.save_metrics(args.metrics_out)}")
+
+
+def load_tune_cache(args, tag: str):
+    """Layer ``--tune-cache`` over the seed cache (no-op when unset)."""
+    if args.tune_cache:
+        from repro.kernels.autotune import load_cache
+        n = load_cache(args.tune_cache)
+        print(f"[{tag}] tuning cache: {n} entries from {args.tune_cache}")

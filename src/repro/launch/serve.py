@@ -1,7 +1,9 @@
 """Serving launcher: load (or init) a model and serve a synthetic request
-stream through the continuous-batching engine (DESIGN.md §9).
+stream through the continuous-batching engine (DESIGN.md §9) — or, with
+``--replicas N``, through the data-parallel serving tier (DESIGN.md §15):
+N engine replicas behind the SLO-aware router.
 
-Engine knobs surfaced here: ``--max-batch`` (decode slots),
+Engine knobs surfaced here: ``--max-batch`` (decode slots per replica),
 ``--prefill-chunk`` (0 = one-shot prefill; otherwise prompts are consumed
 in chunks interleaved with decode), ``--scheduler fcfs|sjf``, ``--impl``
 (GSPN kernel selection threaded into the model config),
@@ -11,8 +13,15 @@ pooled propagation state at rest — half the pool bytes, ~2× decode batch
 at fixed memory) and ``--precision bf16`` (run the model itself under the
 mixed-precision policy, DESIGN.md §10).
 
+Tier knobs (shared definitions in ``launch/args.py``): ``--replicas``,
+``--router least_loaded|ttft``, ``--prefix-cache N`` (shared prefix/state
+cache entries; prompts sharing a chunk-aligned prefix resume prefill from
+cached boundary state), ``--slo-ttft`` (seconds; predicted-miss
+admissions are counted, DESIGN.md §15).
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
-        --reduced --requests 8 --prefill-chunk 128 --scheduler sjf
+        --reduced --requests 8 --prefill-chunk 128 --scheduler sjf \
+        --replicas 2 --router ttft --prefix-cache 8
 """
 
 from __future__ import annotations
@@ -25,9 +34,10 @@ import numpy as np
 
 from repro import obs
 from repro.checkpoint.manager import CheckpointManager
-from repro.configs.base import (PRECISIONS, get_arch, resolve_dtype,
-                                with_precision)
+from repro.configs.base import get_arch, resolve_dtype, with_precision
+from repro.launch import args as largs
 from repro.models.lm import Ctx, init_lm
+from repro.serve.cache import PrefixStateCache
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -44,45 +54,19 @@ def main():
                     help="chunked prefill size in tokens (0 = one-shot)")
     ap.add_argument("--scheduler", default="fcfs", choices=["fcfs", "sjf"])
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--impl", default="",
-                    help="override the GSPN kernel impl= knob "
-                         "(auto|pallas|multidir|xla|sp)")
     ap.add_argument("--seq-parallel", type=int, default=1,
                     help="carve a seq mesh axis of this size and serve "
                          "the sharded model (impl=sp, DESIGN.md §8)")
-    ap.add_argument("--state-dtype", default="",
-                    choices=["", "f32", "bf16"],
-                    help="at-rest dtype of the pooled propagation state "
-                         "(bf16 halves pool bytes, DESIGN.md §10)")
-    ap.add_argument("--precision", default="",
-                    choices=[""] + sorted(PRECISIONS),
-                    help="mixed-precision policy for the served model "
-                         "(params/compute/carries, DESIGN.md §10)")
-    ap.add_argument("--tune-cache", default="",
-                    help="kernel tuning cache JSON (DESIGN.md §11), "
-                         "layered over the checked-in seed cache; every "
-                         "GSPN launch in the engine then uses measured "
-                         "row tiles instead of the VMEM heuristic")
     ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--trace-out", default="",
-                    help="write a Chrome trace-event JSON of the run here "
-                         "(open in Perfetto / chrome://tracing; "
-                         "DESIGN.md §13)")
-    ap.add_argument("--metrics-out", default="",
-                    help="write the metrics-registry snapshot here "
-                         "(.prom => Prometheus text, else JSON; "
-                         "DESIGN.md §13)")
+    largs.add_impl_arg(ap)
+    largs.add_precision_args(ap, state_dtype=True)
+    largs.add_tuning_args(ap)
+    largs.add_router_args(ap)
+    largs.add_observability_args(ap)
     args = ap.parse_args()
 
-    if args.trace_out:
-        # Enable BEFORE model build so jit-trace-time spans (kernel
-        # dispatch/launch, autotune plan resolution) are captured.
-        obs.enable()
-
-    if args.tune_cache:
-        from repro.kernels.autotune import load_cache
-        n = load_cache(args.tune_cache)
-        print(f"[serve] tuning cache: {n} entries from {args.tune_cache}")
+    largs.setup_observability(args)
+    largs.load_tune_cache(args, "serve")
 
     entry = get_arch(args.arch)
     cfg = entry.reduced() if args.reduced else entry.full()
@@ -110,49 +94,78 @@ def main():
         params = restored["params"]
         print(f"[serve] restored checkpoint step {step}")
 
-    eng = ServeEngine(params, cfg, batch_size=args.max_batch,
-                      max_len=args.max_len, temperature=args.temperature,
-                      prefill_chunk=args.prefill_chunk,
-                      scheduler=args.scheduler, ctx=ctx,
-                      state_dtype=(resolve_dtype(args.state_dtype)
-                                   if args.state_dtype else None))
+    prefix_cache = (PrefixStateCache(capacity=args.prefix_cache)
+                    if args.prefix_cache > 0 else None)
+
+    def make_engine(seed=0):
+        return ServeEngine(
+            params, cfg, batch_size=args.max_batch, max_len=args.max_len,
+            temperature=args.temperature, prefill_chunk=args.prefill_chunk,
+            scheduler=args.scheduler, ctx=ctx, seed=seed,
+            prefix_cache=prefix_cache,
+            state_dtype=(resolve_dtype(args.state_dtype)
+                         if args.state_dtype else None))
+
+    if args.replicas > 1:
+        from repro.serve.router import Router
+        engines = [make_engine(seed=i) for i in range(args.replicas)]
+        tier = Router(engines, policy=args.router, slo_ttft=args.slo_ttft)
+        pool = engines[0].pool
+        chunk = engines[0].prefill_chunk
+        print(f"[serve] router: {args.replicas} replicas, "
+              f"policy={args.router}, slo_ttft={args.slo_ttft * 1e3:.0f} ms"
+              + (f", prefix cache {args.prefix_cache} entries"
+                 if prefix_cache else ""))
+    else:
+        tier = make_engine()
+        pool, chunk = tier.pool, tier.prefill_chunk
     if args.state_dtype:
         print(f"[serve] state pool dtype {args.state_dtype}: "
-              f"{eng.pool.nbytes/2**20:.1f} MiB pooled state")
+              f"{args.replicas * pool.nbytes/2**20:.1f} MiB pooled state")
+
     rng = np.random.default_rng(0)
     # Discrete prompt lengths (each distinct length is a separate jit
     # trace of the prefill); when chunking is on, the long length must
     # actually exceed the (alignment-snapped) chunk so the chunked path
     # runs at this entry point's workload sizes.
-    long_len = min(args.max_len - args.max_new,
-                   3 * eng.prefill_chunk) if eng.prefill_chunk else 24
+    long_len = min(args.max_len - args.max_new, 3 * chunk) if chunk else 24
+    handles = []
     for i in range(args.requests):
-        plen = long_len if (eng.prefill_chunk and i % 2) else 12
-        eng.submit(Request(
+        plen = long_len if (chunk and i % 2) else 12
+        handles.append(tier.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab, max(plen, 4)),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new)))
     t0 = obs.monotonic()
-    results = eng.run()
+    tier.run()
     dt = obs.monotonic() - t0
-    if args.trace_out:
-        print(f"[serve] trace: {obs.save_chrome_trace(args.trace_out)} "
-              f"({len(obs.records())} events)")
-    if args.metrics_out:
-        print(f"[serve] metrics: {obs.save_metrics(args.metrics_out)}")
+    largs.finish_observability(args, "serve")
+    results = [h.result() for h in handles]
     if not results:
         print(f"[serve] {args.arch}: 0 requests")
         return
-    total = sum(len(r.tokens) for r in results.values())
-    ttfts = sorted(r.ttft for r in results.values())
-    m = eng.metrics
+    total = sum(len(r.tokens) for r in results)
+    ttfts = sorted(r.ttft for r in results)
+    cached = sum(r.cached_tokens for r in results)
     print(f"[serve] {args.arch}: {len(results)} requests, {total} tokens, "
-          f"{total/dt:.1f} tok/s")
-    print(f"[serve] ttft p50 {ttfts[len(ttfts)//2]*1e3:.1f} ms, "
-          f"max {ttfts[-1]*1e3:.1f} ms; queue depth "
-          f"mean {m['queue_depth_mean']:.1f} / "
-          f"max {m['queue_depth_max']}; "
-          f"{m['prefill_chunks']} prefill chunks / "
-          f"{m['decode_steps']} decode steps over {m['ticks']} ticks")
+          f"{total/dt:.1f} tok/s"
+          + (f", {cached} prompt tokens prefix-cached" if cached else ""))
+    if args.replicas > 1:
+        placed = [h.replica for h in handles]
+        snap = obs.snapshot()
+        risk = snap.get("counters", {}).get("router_slo_at_risk_total", 0)
+        print(f"[serve] placement: "
+              f"{[placed.count(r) for r in range(args.replicas)]} "
+              f"requests/replica; {risk} admissions predicted past SLO")
+        print(f"[serve] ttft p50 {ttfts[len(ttfts)//2]*1e3:.1f} ms, "
+              f"max {ttfts[-1]*1e3:.1f} ms")
+    else:
+        m = tier.metrics
+        print(f"[serve] ttft p50 {ttfts[len(ttfts)//2]*1e3:.1f} ms, "
+              f"max {ttfts[-1]*1e3:.1f} ms; queue depth "
+              f"mean {m['queue_depth_mean']:.1f} / "
+              f"max {m['queue_depth_max']}; "
+              f"{m['prefill_chunks']} prefill chunks / "
+              f"{m['decode_steps']} decode steps over {m['ticks']} ticks")
 
 
 if __name__ == "__main__":

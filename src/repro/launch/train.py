@@ -17,9 +17,9 @@ import logging
 
 import jax
 
-from repro import obs
-from repro.configs.base import PRECISIONS, get_arch, with_precision
+from repro.configs.base import get_arch, with_precision
 from repro.data.pipeline import DataConfig
+from repro.launch import args as largs
 from repro.launch.mesh import (dp_axes_for, make_mesh_for_devices,
                                make_production_mesh)
 from repro.optim.adamw import AdamWConfig
@@ -44,38 +44,16 @@ def main():
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "int8_ef"])
     ap.add_argument("--grad-accum", type=int, default=1)
-    ap.add_argument("--precision", default="",
-                    choices=[""] + sorted(PRECISIONS),
-                    help="mixed-precision policy (DESIGN.md §10); 'bf16' "
-                         "trains bf16 params over an f32 master copy "
-                         "with dynamic loss scaling")
     ap.add_argument("--distributed", action="store_true",
                     help="initialise jax.distributed from env (multi-host)")
-    ap.add_argument("--tune-cache", default="",
-                    help="kernel tuning cache JSON (DESIGN.md §11), "
-                         "layered over the checked-in seed cache; fwd/bwd "
-                         "GSPN launches in the train step then use "
-                         "measured row tiles instead of the VMEM heuristic")
-    ap.add_argument("--trace-out", default="",
-                    help="write a Chrome trace-event JSON of the run here "
-                         "(open in Perfetto / chrome://tracing; "
-                         "DESIGN.md §13)")
-    ap.add_argument("--metrics-out", default="",
-                    help="write the metrics-registry snapshot here "
-                         "(.prom => Prometheus text, else JSON; "
-                         "DESIGN.md §13)")
+    largs.add_precision_args(ap)
+    largs.add_tuning_args(ap)
+    largs.add_observability_args(ap)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
 
-    if args.trace_out:
-        # Enable BEFORE setup so jit-trace-time spans (kernel dispatch /
-        # launch, autotune plan resolution) are captured.
-        obs.enable()
-
-    if args.tune_cache:
-        from repro.kernels.autotune import load_cache
-        logging.info("tuning cache: %d entries from %s",
-                     load_cache(args.tune_cache), args.tune_cache)
+    largs.setup_observability(args)
+    largs.load_tune_cache(args, "train")
 
     if args.distributed:
         jax.distributed.initialize()
@@ -119,11 +97,7 @@ def main():
         **mp_kwargs)
     trainer.init_or_restore()
     hist = trainer.run(args.steps)
-    if args.trace_out:
-        print(f"[train] trace: {obs.save_chrome_trace(args.trace_out)} "
-              f"({len(obs.records())} events)")
-    if args.metrics_out:
-        print(f"[train] metrics: {obs.save_metrics(args.metrics_out)}")
+    largs.finish_observability(args, "train")
     print(f"[train] {args.arch}: loss {hist[0]:.4f} -> {hist[-1]:.4f}, "
           f"recoveries={trainer.recoveries}")
 

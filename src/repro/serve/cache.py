@@ -25,9 +25,15 @@ is built on, and is layout-aware — prelude/shared stages stack caches as
 
 from __future__ import annotations
 
+import collections
+import hashlib
+import threading
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import obs
 from repro.models import lm as lm_mod
 
 
@@ -67,6 +73,106 @@ def update_cache_slots(cfg, caches, new_caches, slots):
             axis = 2
         out[key] = jax.tree.map(upd(axis), sub, new_caches[key])
     return out
+
+
+def _prefix_metrics():
+    """Prefix-cache counters in the process-global registry (get-or-create
+    per access, mirroring the engine's ``_serve_metrics`` pattern)."""
+    return {
+        "hits": obs.counter("serve_prefix_hits_total",
+                            "prefill admissions resumed from a cached "
+                            "prefix state"),
+        "misses": obs.counter("serve_prefix_misses_total",
+                              "prefill admissions with no usable prefix"),
+        "reused": obs.counter("serve_prefix_tokens_reused_total",
+                              "prompt tokens served from cached state "
+                              "instead of recomputed"),
+        "evicted": obs.counter("serve_prefix_evictions_total",
+                               "prefix entries dropped by the LRU bound"),
+    }
+
+
+class PrefixStateCache:
+    """Token-prefix → boundary-state cache for chunked prefill
+    (DESIGN.md §15).
+
+    The GSPN propagation state at a fold-row boundary is O(W) and
+    resumable (PR 3 proved chunk-chain ≡ one-shot), so a prompt-prefix
+    cache needs no new numerics: store the engine's in-flight batch-1
+    cache pytree at a chunk-aligned offset ``k`` (chunk offsets are
+    snapped to the fold width, so ``k`` always sits on a grid-row
+    boundary), and a later prompt sharing those ``k`` tokens re-enters
+    ``lm_prefill_chunk`` at offset ``k`` through the exact
+    ``boundary=chunk_resume`` path a cold chain uses.
+
+    Keys are the SHA-1 of the prefix's int32 token bytes; the exact
+    token array is stored alongside and verified on lookup, so a hash
+    collision degrades to a miss, never to wrong state.  Entries hold
+    jax arrays (immutable — sharing with an in-flight prefill is safe);
+    ``lookup`` returns a fresh *container* copy so the engine's dict
+    bookkeeping never aliases the stored entry.  Bounded LRU: entries
+    are full per-slot cache pytrees (O(max_len) attention KV), so the
+    default capacity is deliberately small.  Thread-safe — router tiers
+    share ONE instance across replica worker threads.
+    """
+
+    def __init__(self, capacity: int = 8):
+        self.capacity = capacity
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def _key(tokens: np.ndarray) -> str:
+        return hashlib.sha1(
+            np.ascontiguousarray(tokens, np.int32).tobytes()).hexdigest()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        """Total bytes of every cached state pytree (capacity planning)."""
+        with self._lock:
+            return sum(int(a.size) * a.dtype.itemsize
+                       for _toks, tree in self._entries.values()
+                       for a in jax.tree.leaves(tree))
+
+    def insert(self, prefix_tokens, cache_tree):
+        """Store ``cache_tree`` (the engine's batch-1 prefill cache after
+        consuming exactly ``prefix_tokens``).  The caller guarantees the
+        offset is chunk-aligned; re-inserting an existing prefix just
+        refreshes its LRU position."""
+        toks = np.ascontiguousarray(prefix_tokens, np.int32)
+        key = self._key(toks)
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                return
+            self._entries[key] = (toks, cache_tree)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                _prefix_metrics()["evicted"].inc()
+
+    def lookup(self, prompt, chunk: int):
+        """Longest cached chunk-aligned proper prefix of ``prompt``.
+        Returns ``(k, cache_tree_copy)`` or None.  ``k`` is capped at
+        ``len(prompt) - 1`` so at least one prompt token remains to
+        prefill — the final chunk must produce the first-token logits."""
+        prompt = np.ascontiguousarray(prompt, np.int32)
+        m = _prefix_metrics()
+        k = ((len(prompt) - 1) // chunk) * chunk
+        while k >= chunk:
+            with self._lock:
+                ent = self._entries.get(self._key(prompt[:k]))
+                if ent is not None and np.array_equal(ent[0], prompt[:k]):
+                    self._entries.move_to_end(self._key(prompt[:k]))
+                    m["hits"].inc()
+                    m["reused"].inc(k)
+                    # fresh containers, shared (immutable) leaves
+                    return k, jax.tree.map(lambda a: a, ent[1])
+            k -= chunk
+        m["misses"].inc()
+        return None
 
 
 class StateCachePool:

@@ -33,10 +33,17 @@ kept as a per-engine compat view (the historical dict keys plus a derived
 lifecycle as spans: one async ``request`` span per uid
 (queued → admitted → finished) enclosing the engine thread's
 ``serve.prefill_chunk`` / ``serve.decode_step`` child spans, the latter
-annotated with the autotuner-resolved kernel plan.  Batch drivers collect
-``run()``'s results dict; long-running front-ends pass ``on_finish`` so
-retired results are delivered instead of retained and engine state stays
-bounded.
+annotated with the autotuner-resolved kernel plan.
+
+Submission surface: ``submit`` returns a :class:`RequestHandle`
+(uid / status / ``result()`` accessor) — the one object a caller, the
+router tier (serve.router), and a failure re-route all share.  Batch
+drivers may still collect ``run()``'s results dict; the pre-handle
+``on_finish`` callback survives as a deprecated shim.  When the engine
+serves behind a router, a shared ``prefix_cache``
+(serve.cache.PrefixStateCache) lets chunked prefill resume from a cached
+fold-boundary state instead of recomputing a shared prompt prefix
+(DESIGN.md §15).
 """
 
 from __future__ import annotations
@@ -90,6 +97,9 @@ def _serve_metrics():
         "qdepth_hist": obs.histogram("serve_queue_depth_ticks",
                                      buckets=obs.DEPTH_BUCKETS,
                                      help="queue depth sampled per tick"),
+        "chunk_s": obs.histogram("serve_prefill_chunk_seconds",
+                                 help="wall seconds per prefill chunk "
+                                      "(the TTFT predictor's cost model)"),
     }
 
 
@@ -119,21 +129,26 @@ def sample_tokens(logits, rng, temperature: float, top_k: int):
 def drive(engine, requests, arrivals, *, idle_sleep: float = 0.002):
     """Open-loop arrival driver shared by examples and benchmarks: submit
     each request at its arrival time (seconds relative to the call), tick
-    the engine in between, and return elapsed wall-clock seconds once the
-    engine drains.  Open-loop means arrivals never wait for completions —
-    queueing shows up in the metrics instead of being hidden."""
+    the engine in between, and return ``(elapsed_seconds, handles)`` once
+    the engine drains — ``handles`` parallel to ``requests``, each
+    finished, so callers read results through the handle API.  Works
+    against a single :class:`ServeEngine` or a router (anything with
+    ``submit``/``tick``/``idle``).  Open-loop means arrivals never wait
+    for completions — queueing shows up in the metrics instead of being
+    hidden."""
     t0 = obs.monotonic()
     nxt = 0
+    handles = []
     while nxt < len(requests) or not engine.idle:
         now = obs.monotonic() - t0
         while nxt < len(requests) and arrivals[nxt] <= now:
-            engine.submit(requests[nxt])
+            handles.append(engine.submit(requests[nxt]))
             nxt += 1
         if engine.idle and nxt < len(requests):
             time.sleep(min(arrivals[nxt] - now, idle_sleep))
             continue
         engine.tick()
-    return obs.monotonic() - t0
+    return obs.monotonic() - t0, handles
 
 
 @dataclasses.dataclass
@@ -145,6 +160,45 @@ class Result:
     itl: list = dataclasses.field(default_factory=list)  # inter-token (s)
     prefill_chunks: int = 0         # 0 == one-shot prefill
     finish_reason: str = ""         # "eos" | "length"
+    t_submit: float = 0.0           # obs.monotonic() at submit
+    t_finish: float = 0.0           # obs.monotonic() at retirement
+    cached_tokens: int = 0          # prompt tokens resumed from the
+    #                                 prefix cache instead of recomputed
+
+
+@dataclasses.dataclass
+class RequestHandle:
+    """What :meth:`ServeEngine.submit` returns: the caller's view of one
+    request's lifecycle.  ``status`` moves queued → running → finished;
+    ``result()`` is the accessor for the finished :class:`Result` (raises
+    until then — poll ``done`` or drive the engine first).  The routing
+    tier reuses ONE handle across re-submissions (replica failure drains
+    a queue back through the router), so the object a caller holds stays
+    valid wherever the request lands; ``replica`` records the current
+    placement."""
+
+    uid: int
+    status: str = "queued"          # "queued" | "running" | "finished"
+    replica: Optional[int] = None   # owning replica id (router tier)
+    _result: Optional[Result] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def done(self) -> bool:
+        return self.status == "finished"
+
+    def result(self) -> Result:
+        if self._result is None:
+            raise RuntimeError(f"request {self.uid} is {self.status}; "
+                               "result() is only available once finished")
+        return self._result
+
+    def _finish(self, res: Result):
+        self._result = res
+        self.status = "finished"
+
+
+# Warn-once latch for the legacy ``on_finish`` callback surface.
+_on_finish_warned = False
 
 
 class ServeEngine:
@@ -154,7 +208,8 @@ class ServeEngine:
                  seed: int = 0, ctx=None, prefill_chunk: int = 0,
                  scheduler: str = "fcfs", state_dtype=None,
                  stream: Optional[Callable[[int, int], None]] = None,
-                 on_finish: Optional[Callable[[Result], None]] = None):
+                 on_finish: Optional[Callable[[Result], None]] = None,
+                 prefix_cache=None):
         if scheduler not in ("fcfs", "sjf"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.params = params
@@ -171,7 +226,16 @@ class ServeEngine:
         self.state_dtype = (None if state_dtype is None
                             else jnp.dtype(state_dtype))
         self.stream = stream
-        self.on_finish = on_finish
+        # Internal finish hook for the routing tier (Replica installs it);
+        # distinct from the DEPRECATED user-facing ``on_finish`` so the
+        # two can never shadow each other.
+        self._finish_hook: Optional[Callable[[Result], None]] = None
+        self._on_finish = None
+        self.on_finish = on_finish       # property: warns once if not None
+        # Shared prefix/state cache (serve.cache.PrefixStateCache); None
+        # disables the probe.  Router tiers pass ONE cache to every
+        # replica so a prefix prefilled anywhere is reusable everywhere.
+        self.prefix_cache = prefix_cache
         self.rng = jax.random.PRNGKey(seed)
         self._seed = seed
 
@@ -198,8 +262,28 @@ class ServeEngine:
             static_argnums=4)
         self._decode = jax.jit(self._decode_fn)
 
+    @property
+    def on_finish(self):
+        """DEPRECATED side-channel result delivery — ``submit`` returns a
+        :class:`RequestHandle` now; read results through it.  Kept as a
+        shim (warns once per process) for pre-handle callers."""
+        return self._on_finish
+
+    @on_finish.setter
+    def on_finish(self, fn):
+        global _on_finish_warned
+        if fn is not None and not _on_finish_warned:
+            _on_finish_warned = True
+            import warnings
+            warnings.warn(
+                "ServeEngine(on_finish=...) is deprecated; submit() "
+                "returns a RequestHandle — read results through it",
+                DeprecationWarning, stacklevel=3)
+        self._on_finish = fn
+
     def _reset_state(self):
         self.waiting: list = []              # [(Request, t_submit)]
+        self._handles: dict = {}             # uid -> unfinished handle
         self._inflight = None                # chunked prefill in progress
         self.slot_req = [None] * self.bs
         self._slot_res: list = [None] * self.bs
@@ -246,23 +330,37 @@ class ServeEngine:
         return nxt, new_caches
 
     # -- request management -------------------------------------------------
-    def submit(self, req: Request):
-        # Reject oversized requests at the door: past max_len the chunked
-        # prefill would silently clamp its KV writes and the decode step
-        # silently drops K/V (the one_hot blend writes nothing) — wrong
-        # tokens, no error.  Decode writes cache rows up to
-        # prompt + max_new − 2 (the final token is never written).
+    def check_fits(self, req: Request):
+        """Reject oversized requests at the door: past max_len the chunked
+        prefill would silently clamp its KV writes and the decode step
+        silently drops K/V (the one_hot blend writes nothing) — wrong
+        tokens, no error.  Decode writes cache rows up to
+        prompt + max_new − 2 (the final token is never written).  Pure
+        check (thread-safe) so the router can validate before handing the
+        request to a replica worker thread."""
         need = len(req.prompt) + max(req.max_new_tokens, 1) - 1
         if need > self.max_len:
             raise ValueError(
                 f"prompt ({len(req.prompt)}) + max_new_tokens "
                 f"({req.max_new_tokens}) needs {need} cache rows, exceeding "
                 f"the per-slot capacity max_len={self.max_len}")
+
+    def submit(self, req: Request, *,
+               handle: Optional[RequestHandle] = None) -> RequestHandle:
+        """Queue a request; returns its :class:`RequestHandle`.  ``handle``
+        lets the routing tier re-submit a drained request under the handle
+        the caller already holds (replica-failure path)."""
+        self.check_fits(req)
+        if handle is None:
+            handle = RequestHandle(uid=req.uid)
+        handle.status = "queued"
+        self._handles[req.uid] = handle
         self.waiting.append((req, obs.monotonic()))
         _serve_metrics()["submitted"].inc()
         obs.async_begin("request", req.uid, prompt_tokens=len(req.prompt),
                         max_new_tokens=req.max_new_tokens)
         obs.event("request.queued", uid=req.uid)
+        return handle
 
     def _pop_next(self):
         if self.scheduler == "sjf":
@@ -296,6 +394,48 @@ class ServeEngine:
         backpressure signal, not an occupancy count."""
         return len(self.waiting)
 
+    @property
+    def pending_chunks(self) -> int:
+        """Prefill chunks of work queued ahead of a new arrival: the
+        in-flight request's remaining chunks plus an estimate for every
+        waiting prompt.  The TTFT-predictive router policy multiplies
+        this by the measured per-chunk latency (DESIGN.md §15)."""
+        n = 0
+        if self._inflight is not None:
+            st = self._inflight
+            left = len(st["toks"]) - st["off"]
+            n += -(-left // self.prefill_chunk)
+        if self.prefill_chunk:
+            for req, _t in self.waiting:
+                n += max(-(-len(req.prompt) // self.prefill_chunk), 1)
+        else:
+            n += len(self.waiting)
+        return n
+
+    def drain(self) -> list:
+        """Evacuate every unfinished request — the replica-failure path.
+        Returns ``[(Request, RequestHandle), ...]`` (admitted requests
+        first, then the in-flight prefill, then the waiting queue) with
+        each handle reset to ``queued`` so the router can re-submit it to
+        a survivor under the SAME handle the caller holds.  Partial decode
+        progress is discarded (restart semantics); all scheduling state is
+        reset, compiled functions kept."""
+        reqs = [self.slot_req[s] for s in range(self.bs) if self.active[s]]
+        if self._inflight is not None:
+            reqs.append(self._inflight["req"])
+        reqs.extend(r for r, _t in self.waiting)
+        out = []
+        for req in reqs:
+            h = self._handles.pop(req.uid, None)
+            if h is None:
+                h = RequestHandle(uid=req.uid)
+            h.status = "queued"
+            h._result = None
+            obs.async_end("request", req.uid, finish_reason="evacuated")
+            out.append((req, h))
+        self.reset()
+        return out
+
     # -- prefill ------------------------------------------------------------
     def _admit(self):
         while self.waiting:
@@ -309,15 +449,29 @@ class ServeEngine:
             self._m["admission_order"].append(req.uid)
             obs.event("request.admitted", uid=req.uid, slot=slot)
             if self.prefill_chunk and len(req.prompt) > self.prefill_chunk:
-                # A fresh zeroed batch-1 cache per admission (once per
-                # request, not per chunk).  Reusing a persistent scratch
-                # would need leaf-selective resets — a stale GSPN
-                # prev_row corrupts the seeded scan — for one saved
-                # zero-fill; not worth the foot-gun.
+                toks = np.asarray(req.prompt, np.int32)
+                # Prefix/state probe (DESIGN.md §15): a hit hands back the
+                # full boundary-state cache at a chunk-aligned offset k —
+                # prefill resumes at k via the same chunk_resume path a
+                # cold chunk chain uses, so reuse is a lookup, not a new
+                # numeric mode.
+                off, cache = 0, None
+                if self.prefix_cache is not None:
+                    hit = self.prefix_cache.lookup(toks, self.prefill_chunk)
+                    if hit is not None:
+                        off, cache = hit
+                        obs.event("request.prefix_hit", uid=req.uid,
+                                  cached_tokens=off)
+                if cache is None:
+                    # A fresh zeroed batch-1 cache per admission (once per
+                    # request, not per chunk).  Reusing a persistent
+                    # scratch would need leaf-selective resets — a stale
+                    # GSPN prev_row corrupts the seeded scan — for one
+                    # saved zero-fill; not worth the foot-gun.
+                    cache = lm_mod.init_lm_cache(self.cfg, 1, self.max_len)
                 self._inflight = {
-                    "req": req, "slot": slot, "off": 0, "chunks": 0,
-                    "toks": np.asarray(req.prompt, np.int32),
-                    "cache": lm_mod.init_lm_cache(self.cfg, 1, self.max_len),
+                    "req": req, "slot": slot, "off": off, "chunks": 0,
+                    "cached": off, "toks": toks, "cache": cache,
                     "t_submit": t_submit, "t_admit": t_admit,
                 }
             else:
@@ -337,6 +491,7 @@ class ServeEngine:
         off = st["off"]
         end = min(off + self.prefill_chunk, len(st["toks"]))
         last = end == len(st["toks"])
+        t0 = obs.monotonic()
         with obs.trace("serve.prefill_chunk", uid=st["req"].uid,
                        index=st["chunks"], offset=off, tokens=end - off):
             chunk = jnp.asarray(st["toks"][off:end], jnp.int32)[None]
@@ -345,21 +500,39 @@ class ServeEngine:
             logits, st["cache"] = self._prefill_chunk_fn(
                 self.params, chunk, st["cache"], jnp.asarray(off, jnp.int32),
                 last)
+            # Block so the chunk histogram measures device time, not
+            # dispatch: the per-chunk latency is the TTFT predictor's
+            # cost model (DESIGN.md §15), and the very next tick would
+            # block on this state anyway.
+            jax.block_until_ready(st["cache"])
+        _serve_metrics()["chunk_s"].observe(obs.monotonic() - t0)
         st["off"] = end
         st["chunks"] += 1
         self._m["prefill_chunks"] += 1
         _serve_metrics()["chunks"].inc()
+        if (self.prefix_cache is not None
+                and end % self.prefill_chunk == 0 and end > st["cached"]):
+            # Every freshly computed chunk boundary is a reusable prefix
+            # state: chunk offsets are alignment-snapped, so `end` sits on
+            # a GSPN fold-row boundary (the resumable-state contract).
+            self.prefix_cache.insert(st["toks"][:end], st["cache"])
         if last:
             first = self._sample_first(logits[0, -1])
             self.pool.commit(st["slot"], st["cache"])
             self._activate(st["req"], st["slot"], first,
-                           st["t_submit"], st["t_admit"], st["chunks"])
+                           st["t_submit"], st["t_admit"], st["chunks"],
+                           cached=st["cached"])
             self._inflight = None
 
-    def _activate(self, req, slot, first, t_submit, t_admit, chunks):
+    def _activate(self, req, slot, first, t_submit, t_admit, chunks,
+                  cached: int = 0):
         now = obs.monotonic()
         res = Result(uid=req.uid, tokens=[first], ttft=now - t_submit,
-                     queue_delay=t_admit - t_submit, prefill_chunks=chunks)
+                     queue_delay=t_admit - t_submit, prefill_chunks=chunks,
+                     t_submit=t_submit, cached_tokens=cached)
+        h = self._handles.get(req.uid)
+        if h is not None:
+            h.status = "running"
         sm = _serve_metrics()
         sm["ttft"].observe(res.ttft)
         sm["qdelay"].observe(res.queue_delay)
@@ -381,12 +554,21 @@ class ServeEngine:
     def _retire(self, slot, reason: str):
         res = self._slot_res[slot]
         res.finish_reason = reason
+        res.t_finish = obs.monotonic()
         _serve_metrics()["finished"].inc()
         obs.async_end("request", res.uid, finish_reason=reason,
                       tokens=len(res.tokens))
-        if self.on_finish is not None:
-            # long-running front-ends consume results here; nothing is
-            # retained engine-side, so state stays bounded
+        h = self._handles.pop(res.uid, None)
+        if h is not None:
+            h._finish(res)
+        if self._finish_hook is not None:
+            # routing tier: the replica/router observes the finish; the
+            # handle already carries the result, so nothing is retained
+            # engine-side and state stays bounded
+            self._finish_hook(res)
+        elif self.on_finish is not None:
+            # deprecated front-end callback (pre-handle shim); nothing is
+            # retained engine-side
             self.on_finish(res)
         else:
             self.results[res.uid] = res

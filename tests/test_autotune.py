@@ -601,3 +601,62 @@ def test_entry_invalid_reason_strings():
                                             "pipeline_depth": 7})
     big = _key(h=1 << 20, w=8192)
     assert "VMEM" in reason(big, {"row_tile": 1 << 19})
+
+
+# ---------------------------------------------------------------------------
+# Deprecated kwargs-style shims over plan_for_spec (PR consolidation).
+# ---------------------------------------------------------------------------
+
+def test_plan_for_shim_equivalent_to_plan_for_spec(monkeypatch):
+    """The deprecated kwargs surface must resolve the IDENTICAL plan as
+    the spec surface for every leg combination — cache hit, reject path,
+    heuristic miss — and warn exactly once per process."""
+    import warnings
+
+    monkeypatch.setattr(A, "_plan_for_warned", False)
+    cache = A.TuningCache()
+    hit = _key(device=A.device_kind(False))
+    cache.store(hit, {"row_tile": 16, "pipeline_depth": 2})
+
+    cases = [
+        dict(direction="fwd", channel_shared=True, dtype="float32"),
+        dict(direction="bwd", channel_shared=False, dtype="bfloat16"),
+        dict(direction="fwd", channel_shared=True, dtype="float32",
+             boundary="chunk_resume"),
+        dict(direction="fwd", channel_shared=False, dtype="float32",
+             row_tile=16, pipeline_depth=1),
+    ]
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for kw in cases:
+            legacy = A.plan_for(hit.h, hit.w, c=hit.c, impl="pallas",
+                                carry_dtype="float32", cache=cache, **kw)
+            spec = ScanSpec(
+                direction=kw["direction"], impl="pallas",
+                channels_per_weight=2 if kw["channel_shared"] else 1,
+                stream_dtype=kw["dtype"], carry_dtype="float32",
+                row_tile=kw.get("row_tile"),
+                pipeline_depth=kw.get("pipeline_depth"),
+                boundary=kw.get("boundary", "one_shot"),
+                interpret=False)
+            assert legacy == A.plan_for_spec(spec, hit.h, hit.w, c=hit.c,
+                                             cache=cache), kw
+        deprecations = [w for w in rec
+                        if issubclass(w.category, DeprecationWarning)
+                        and "plan_for" in str(w.message)]
+    assert len(deprecations) == 1       # warn-once latch across 4 calls
+    # the cache-hit case actually hit: kwargs and spec agree on the key
+    assert A.plan_for(hit.h, hit.w, c=hit.c, direction="fwd",
+                      channel_shared=True, cache=cache) == A.ScanPlan(16, 2)
+
+
+def test_row_tile_for_is_the_tile_view_of_plan_for_spec():
+    cache = A.TuningCache()
+    key = _key(device=A.device_kind(False), channel_shared=False)
+    cache.store(key, {"row_tile": 16, "pipeline_depth": 2})
+    sp = ScanSpec(direction="fwd", impl="pallas", channels_per_weight=1,
+                  interpret=False)
+    assert A.row_tile_for(key.h, key.w, c=key.c, channel_shared=False,
+                          cache=cache) \
+        == A.plan_for_spec(sp, key.h, key.w, c=key.c, cache=cache).row_tile \
+        == 16

@@ -43,3 +43,22 @@ def test_design_s13_documents_observability():
                    "queue_depth_mean", "named_scope"):
         assert needle in section, f"DESIGN.md §13 no longer mentions " \
                                   f"{needle!r}"
+
+
+def test_design_s15_documents_serving_tier():
+    """§15 is the serving-tier contract: router policies, prefix/state
+    reuse, and the consolidated plan/handle/flag surfaces must stay
+    named so a rewrite cannot silently drop the documented semantics."""
+    text = (ROOT / "DESIGN.md").read_text()
+    m = re.search(r"^## §15 .*$", text, flags=re.M)
+    assert m, "DESIGN.md is missing §15 (serving tier)"
+    body = text[m.end():]
+    nxt = re.search(r"^## §\d+", body, flags=re.M)
+    section = body[:nxt.start()] if nxt else body
+    for needle in ("least_loaded", "ttft", "serve_prefill_chunk_seconds",
+                   "router_slo_at_risk_total", "PrefixStateCache",
+                   "chunk_resume", "RequestHandle", "plan_for_spec",
+                   "fail_replica", "--replicas", "--prefix-cache",
+                   "launch/args.py", "cached_tokens"):
+        assert needle in section, f"DESIGN.md §15 no longer mentions " \
+                                  f"{needle!r}"

@@ -17,6 +17,7 @@ import pytest
 
 from repro import obs
 from repro.kernels import autotune
+from repro.kernels.spec import ScanSpec
 from repro.obs import report
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -199,12 +200,14 @@ def test_save_metrics_writes_json_or_prom_by_suffix(tmp_path):
 
 def test_plan_resolutions_are_recorded_once_and_summarised():
     obs.enable()
-    plan = autotune.plan_for(64, 64, c=8, direction="fwd", interpret=True)
+    plan = autotune.plan_for_spec(
+        ScanSpec(direction="fwd", interpret=True), 64, 64, c=8)
     evs = [r for r in obs.records() if r.name == "kernel.plan"]
     assert len(evs) == 1 and evs[0].ph == "i"
     assert evs[0].args["row_tile"] == plan.row_tile
     assert evs[0].args["source"] in ("cache", "heuristic")
-    autotune.plan_for(64, 64, c=8, direction="fwd", interpret=True)
+    autotune.plan_for_spec(ScanSpec(direction="fwd", interpret=True),
+                           64, 64, c=8)
     assert len([r for r in obs.records()
                 if r.name == "kernel.plan"]) == 1    # same key: no re-emit
     s = autotune.plans_summary()

@@ -1,0 +1,311 @@
+"""Serving tier: router placement, replica failure drain, prefix/state
+reuse, and the handle API (DESIGN.md §15).
+
+The prefix-cache contract is the §9/§14 resume contract one level up:
+state stored at a chunk-aligned fold boundary and resumed through
+``lm_prefill_chunk`` must reproduce the cold path exactly — pinned here
+both at the mixer level (through :class:`PrefixStateCache` round-trip)
+and end-to-end through two engines sharing one cache.  Router tests run
+the sync tick path so placement and drain order are deterministic.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import gspn as G
+from repro.models.lm import init_lm
+from repro.serve import engine as engine_mod
+from repro.serve.cache import PrefixStateCache
+from repro.serve.engine import Request, ServeEngine, drive
+from repro.serve.router import Router
+from test_prefill_resume import B, DIM, W, _fresh_cache, _mixer
+from test_serve_engine import _gspn_cfg
+
+pytestmark = pytest.mark.serve
+
+
+def _params(cfg):
+    return init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def _reqs(n, plen, vocab=64, max_new=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, vocab, plen),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Prefix/state reuse — the §15 headline invariant.
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_roundtrip_resume_equals_oneshot():
+    """Mixer level: chain a prefix to a fold boundary, round-trip the
+    boundary state through PrefixStateCache (insert + descending-probe
+    lookup), resume the remainder from the looked-up copy — output AND
+    final O(W) cache must match the one-shot mixer to 1e-5."""
+    cfg, params = _mixer(seed=3)
+    total, k = 5 * W + 3, 3 * W
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, total, DIM))
+    prompt = np.arange(total, dtype=np.int32)     # cache identity tokens
+
+    ref, ref_cache = G.apply_gspn_seq_mixer(params, x, cfg,
+                                            return_cache=True)
+
+    # prefix chain to the boundary, then store
+    cache = _fresh_cache()
+    y1, cache = G.gspn_seq_prefill_chunk(params, x[:, :k], cfg, cache)
+    pfx = PrefixStateCache()
+    pfx.insert(prompt[:k], cache)
+
+    # lookup probes 5W and 4W (misses) before hitting the 3W entry
+    hit = pfx.lookup(prompt, chunk=W)
+    assert hit is not None and hit[0] == k
+    y2, end_cache = G.gspn_seq_prefill_chunk(params, x[:, k:], cfg, hit[1])
+
+    got = jnp.concatenate([y1, y2], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert int(end_cache["pos"][0]) == total
+    for leg in ("prev_row", "cur_row", "row_state"):
+        np.testing.assert_allclose(np.asarray(end_cache[leg]),
+                                   np.asarray(ref_cache[leg]),
+                                   rtol=1e-5, atol=1e-5, err_msg=leg)
+
+
+def test_engine_prefix_hit_tokens_equal_cold():
+    """End-to-end: a forced prefix-cache hit (second engine, shared
+    cache, identical prompt) must emit exactly the cold engine's tokens,
+    reporting the reused-token count on the Result."""
+    cfg = _gspn_cfg()
+    params = _params(cfg)
+    prompt = np.random.default_rng(7).integers(0, 64, 40)
+    req = lambda: Request(uid=0, prompt=prompt, max_new_tokens=6)
+
+    def run(eng):
+        h = eng.submit(req())
+        eng.run()
+        return h.result()
+
+    cold = run(ServeEngine(params, cfg, batch_size=2, max_len=64,
+                           prefill_chunk=16))
+    pfx = PrefixStateCache()
+    warmer = run(ServeEngine(params, cfg, batch_size=2, max_len=64,
+                             prefill_chunk=16, prefix_cache=pfx))
+    assert warmer.cached_tokens == 0 and len(pfx) > 0   # miss, then filled
+    hits0 = obs.counter("serve_prefix_hits_total").value
+    warm = run(ServeEngine(params, cfg, batch_size=2, max_len=64,
+                           prefill_chunk=16, prefix_cache=pfx))
+    # longest aligned proper prefix of a 40-token prompt at chunk 16
+    assert warm.cached_tokens == 32
+    assert obs.counter("serve_prefix_hits_total").value == hits0 + 1
+    assert warm.tokens == cold.tokens == warmer.tokens
+
+
+def test_prefix_cache_alignment_and_proper_prefix_cap():
+    """``lookup`` only returns chunk-aligned offsets, capped strictly
+    below the prompt length (the final chunk must produce logits)."""
+    tree = {"s": jnp.zeros((1, 2))}
+    pfx = PrefixStateCache()
+    toks = np.arange(64, dtype=np.int32)
+    for k in (16, 32, 48, 64):
+        pfx.insert(toks[:k], tree)
+    # full 64-token entry exists but a 64-token prompt may only reuse 48
+    assert pfx.lookup(toks, chunk=16)[0] == 48
+    assert pfx.lookup(toks[:33], chunk=16)[0] == 32
+    assert pfx.lookup(toks[:15], chunk=16) is None      # shorter than chunk
+    assert pfx.lookup(np.arange(100, 140, dtype=np.int32), 16) is None
+
+
+def test_prefix_cache_lru_eviction_and_refresh():
+    tree = {"s": jnp.zeros(())}
+    pfx = PrefixStateCache(capacity=2)
+    a, b, c = (np.full(8, i, np.int32) for i in range(3))
+    pfx.insert(a, tree)
+    pfx.insert(b, tree)
+    pfx.insert(a, tree)                  # refresh: a becomes most-recent
+    pfx.insert(c, tree)                  # evicts b, the LRU entry
+    assert len(pfx) == 2
+    assert pfx.lookup(np.concatenate([b, b[:1]]), 8) is None
+    assert pfx.lookup(np.concatenate([a, a[:1]]), 8)[0] == 8
+
+
+def test_prefix_cache_verifies_tokens_not_just_hash():
+    """A poisoned entry (right key, wrong stored tokens — what a hash
+    collision would look like) must degrade to a miss, never to wrong
+    state."""
+    pfx = PrefixStateCache()
+    good = np.arange(8, dtype=np.int32)
+    pfx.insert(good, {"s": jnp.ones(())})
+    other = np.arange(100, 109, dtype=np.int32)
+    key = pfx._key(other[:8])
+    pfx._entries[key] = (good, {"s": jnp.ones(())})   # simulated collision
+    assert pfx.lookup(other, 8) is None
+
+
+# ---------------------------------------------------------------------------
+# Handle API + legacy delivery shims.
+# ---------------------------------------------------------------------------
+
+def test_handle_lifecycle_and_legacy_results_dict():
+    cfg = _gspn_cfg()
+    eng = ServeEngine(_params(cfg), cfg, batch_size=2, max_len=32)
+    h = eng.submit(Request(uid=9, prompt=np.arange(6), max_new_tokens=4))
+    assert h.status == "queued" and not h.done
+    with pytest.raises(RuntimeError, match="queued"):
+        h.result()
+    eng.run()
+    assert h.done and h.result().uid == 9 and h.result().tokens
+    assert h.result().t_finish >= h.result().t_submit > 0.0
+    # hookless engines still fill the legacy results dict
+    assert eng.results[9] is h.result()
+
+
+def test_on_finish_shim_warns_once_and_delivers(monkeypatch):
+    monkeypatch.setattr(engine_mod, "_on_finish_warned", False)
+    cfg = _gspn_cfg()
+    params = _params(cfg)
+    got = []
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng = ServeEngine(params, cfg, batch_size=2, max_len=32,
+                          on_finish=got.append)
+        ServeEngine(params, cfg, batch_size=2, max_len=32,
+                    on_finish=lambda r: None)
+        deprecations = [x for x in w
+                        if issubclass(x.category, DeprecationWarning)
+                        and "on_finish" in str(x.message)]
+    assert len(deprecations) == 1
+    h = eng.submit(Request(uid=1, prompt=np.arange(5), max_new_tokens=3))
+    eng.run()
+    # callback delivery still works, results dict stays empty, and the
+    # handle observes the same Result object
+    assert [r.uid for r in got] == [1]
+    assert not eng.results and h.result() is got[0]
+
+
+# ---------------------------------------------------------------------------
+# Router placement policies (sync mode — deterministic).
+# ---------------------------------------------------------------------------
+
+def _router(n, cfg, params, **kw):
+    engines = [ServeEngine(params, cfg, batch_size=2, max_len=64,
+                           prefill_chunk=16, seed=i) for i in range(n)]
+    return Router(engines, **kw)
+
+
+def test_least_loaded_balances_placement():
+    cfg = _gspn_cfg()
+    router = _router(2, cfg, _params(cfg), policy="least_loaded")
+    handles = [router.submit(r) for r in _reqs(4, plen=12)]
+    placed = sorted(h.replica for h in handles)
+    assert placed == [0, 0, 1, 1]        # strict alternation before ticks
+    router.run()
+    assert all(h.done for h in handles)
+
+
+def test_ttft_policy_routes_around_queued_work():
+    """With one 48-token (3-chunk) prompt parked on replica 0, the
+    TTFT-predictive policy sends subsequent 1-chunk prompts to replica 1
+    until its work-ahead catches up — strict least_loaded would have
+    bounced back to replica 0 on the tie."""
+    cfg = _gspn_cfg()
+    router = _router(2, cfg, _params(cfg), policy="ttft")
+    big = router.submit(Request(uid=100, prompt=np.arange(48) % 64,
+                                max_new_tokens=4))
+    assert big.replica == 0
+    small = [router.submit(r) for r in _reqs(3, plen=8, seed=1)]
+    assert [h.replica for h in small] == [1, 1, 1]
+    router.run()
+    assert all(h.done for h in small) and big.done
+
+
+def test_ttft_slo_risk_is_counted():
+    cfg = _gspn_cfg()
+    params = _params(cfg)
+    # make sure the per-chunk histogram has samples so the predictor
+    # yields seconds (not the pure work-ahead fallback)
+    warm = ServeEngine(params, cfg, batch_size=2, max_len=64,
+                       prefill_chunk=16)
+    warm.submit(Request(uid=0, prompt=np.arange(40) % 64, max_new_tokens=2))
+    warm.run()
+    assert obs.histogram("serve_prefill_chunk_seconds").count > 0
+
+    router = _router(2, cfg, params, policy="ttft", slo_ttft=0.0)
+    risk0 = obs.counter("router_slo_at_risk_total").value
+    h = router.submit(Request(uid=1, prompt=np.arange(40) % 64,
+                              max_new_tokens=2))
+    assert obs.counter("router_slo_at_risk_total").value == risk0 + 1
+    router.run()                         # at-risk admissions still serve
+    assert h.done
+
+
+def test_unknown_policy_rejected():
+    cfg = _gspn_cfg()
+    with pytest.raises(ValueError, match="unknown router policy"):
+        _router(1, cfg, _params(cfg), policy="round_robin")
+
+
+# ---------------------------------------------------------------------------
+# Replica failure: drain to survivors under the same handles.
+# ---------------------------------------------------------------------------
+
+def test_failed_replica_drains_to_survivor_same_handles():
+    cfg = _gspn_cfg()
+    params = _params(cfg)
+
+    reqs = _reqs(6, plen=24, max_new=5, seed=2)
+    ref_eng = ServeEngine(params, cfg, batch_size=2, max_len=64,
+                          prefill_chunk=16)
+    ref = {}
+    for r in reqs:
+        h = ref_eng.submit(Request(uid=r.uid, prompt=r.prompt,
+                                   max_new_tokens=r.max_new_tokens))
+        ref_eng.run()
+        ref[r.uid] = h.result().tokens
+        ref_eng.reset()
+
+    router = _router(2, cfg, params, policy="least_loaded")
+    handles = [router.submit(r) for r in reqs]
+    for _ in range(3):                   # admit + progress work on both
+        router.tick()
+    assert any(h.replica == 0 for h in handles)
+    requeued = router.fail_replica(0)
+    assert requeued > 0
+    assert obs.gauge("router_replicas_alive").value == 1
+    router.run()
+    # the SAME handle objects finish, all on the survivor, and the
+    # restarted requests reproduce the single-engine reference tokens
+    # (greedy decode — drain restarts must not perturb outputs)
+    assert all(h.done and h.replica == 1 for h in handles)
+    for r in reqs:
+        res = next(h.result() for h in handles if h.uid == r.uid)
+        assert res.tokens == ref[r.uid], r.uid
+
+
+def test_last_replica_failure_refuses_to_drop_work():
+    cfg = _gspn_cfg()
+    router = _router(1, cfg, _params(cfg), policy="least_loaded")
+    router.submit(_reqs(1, plen=8)[0])
+    with pytest.raises(RuntimeError, match="no survivors"):
+        router.fail_replica(0)
+    with pytest.raises(RuntimeError, match="no alive replicas"):
+        router.submit(_reqs(1, plen=8, seed=3)[0])
+
+
+def test_threaded_router_completes_under_drive():
+    cfg = _gspn_cfg()
+    router = _router(2, cfg, _params(cfg), policy="least_loaded",
+                     threaded=True)
+    reqs = _reqs(6, plen=12, max_new=4, seed=4)
+    router.start()
+    try:
+        _dt, handles = drive(router, reqs, np.zeros(len(reqs)))
+    finally:
+        router.stop()
+    assert len(handles) == 6 and all(h.done for h in handles)
+    assert {h.uid for h in handles} == {r.uid for r in reqs}
