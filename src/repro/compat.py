@@ -61,3 +61,38 @@ def ambient_mesh():
         return None if m.empty else m
     except Exception:  # noqa: BLE001
         return None
+
+
+def distributed_initialize(coordinator_address: str, num_processes: int,
+                           process_id: int) -> None:
+    """Multi-process (multi-host) runtime init that works on CPU.
+
+    ``jax.distributed.initialize`` alone is not enough on the CPU
+    backend: without a CPU collectives implementation every cross-process
+    computation fails with "Multiprocess computations aren't implemented
+    on the CPU backend".  This shim selects the gloo transport first
+    (where the knob exists — jax >= 0.4.34; real accelerator backends
+    ignore it) and then initializes the distributed runtime, so the same
+    launch code drives a CPU test fleet and a TPU pod.
+
+    Must run BEFORE any jax computation; per-process device counts (e.g.
+    ``--xla_force_host_platform_device_count``) must already be in
+    XLA_FLAGS.  Raises whatever ``jax.distributed.initialize`` raises —
+    callers treating multi-process support as optional should catch and
+    skip.
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except (AttributeError, ValueError):  # knob absent: rely on backend
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
+def distributed_shutdown() -> None:
+    """Tear down the distributed runtime; a no-op when never initialized."""
+    try:
+        jax.distributed.shutdown()
+    except RuntimeError:
+        pass

@@ -146,15 +146,15 @@ def _multi_directional_scan(x, wl, wc, wr, lam, directions, **scan_kwargs):
     assert len(idx) == len(directions), f"duplicate directions {directions}"
     # per_step is the GSPN-1 emulation — by construction one dispatch per
     # line per direction, so pair fusion is intentionally skipped.  The
-    # spatially-sharded path ("sp") also runs per direction: each oriented
-    # scan owns its own boundary exchange over the seq mesh axis, and the
-    # opposite member of a pair scans the other way through the same
-    # blocks, so there is no shared launch to fuse (DESIGN.md §8).  The
-    # impl leg lives in the ScanSpec when one is passed.
+    # spatially-sharded path ("sp") DOES fuse: the opposite members share
+    # one boundary collective over the seq mesh axis (stacked compact
+    # (T, b) states, gspn_scan_sp_pair — DESIGN.md §8), so splitting the
+    # pair would double the exchange count.  The impl leg lives in the
+    # ScanSpec when one is passed.
     sk_spec = scan_kwargs.get("spec")
     impl = (sk_spec.impl if sk_spec is not None
             else scan_kwargs.get("impl", "auto"))
-    fuse = impl not in ("per_step", "sp")
+    fuse = impl != "per_step"
 
     out = [None] * len(directions)
     fused = set()

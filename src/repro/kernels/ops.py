@@ -321,6 +321,9 @@ def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, spec: ScanSpec | None = None,
     Differentiable in all tensor args.  As for :func:`gspn_scan`,
     configuration travels as ONE ``ScanSpec`` — the knob kwargs are the
     legacy construction path, ignored when ``spec`` is given.
+    ``impl="sp"`` shards the pair over the ``seq_axis`` mesh axis with a
+    SINGLE shared boundary collective for both directions
+    (:func:`repro.parallel.gspn_sp.gspn_scan_sp_pair`, DESIGN.md §8).
     """
     spec = _base_spec(spec, impl=impl, row_tile=row_tile,
                       interpret=interpret, carry_dtype=carry_dtype,
@@ -331,6 +334,13 @@ def gspn_scan_pair(x, wl2, wc2, wr2, lam2, *, spec: ScanSpec | None = None,
     cpw = g // gw
     spec = spec.with_(direction="pair_fwd",
                       stream_dtype=str(jnp.dtype(x.dtype)))
+
+    if spec.impl == "sp":
+        from repro.parallel.gspn_sp import gspn_scan_sp_pair
+        return gspn_scan_sp_pair(x, wl2, wc2, wr2, lam2, spec=spec,
+                                 mesh=mesh, axis_name=seq_axis,
+                                 strategy=sp_strategy, chunk=chunk,
+                                 boundary_dtype=sp_boundary_dtype)
 
     if chunk is not None and chunk != h:
         assert h % chunk == 0, (h, chunk)

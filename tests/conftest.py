@@ -17,8 +17,11 @@ import pytest
 # releases; repro.compat papers over both).
 SUB_PRELUDE = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                               + os.environ.get("XLA_FLAGS", ""))
+    # APPENDED so it wins: on duplicated XLA flags the LAST occurrence
+    # applies, and the inherited env may already force a device count
+    # (importing repro.launch.dryrun in the pytest parent sets 512).
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
     import jax, jax.numpy as jnp, numpy as np
     from repro.compat import make_mesh, set_mesh, shard_map
 """)

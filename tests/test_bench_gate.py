@@ -79,6 +79,44 @@ def test_missing_entries_warn_not_fail():
     assert any("missing from current" in w for w in res.warnings)
 
 
+def test_sp_overlap_rung_rows_gate():
+    """The sp_scaling overlap rung (ISSUE 10) is a first-class gated
+    ladder: its rows — fused-pair timing with the overlap/collective
+    metadata packed in the derived column — compare like any other rung,
+    a slowdown on the overlap timing is flagged, and a runtime that
+    cannot run the 2-host rung (no gloo transport) only WARNS about the
+    missing rows.  Also pins that ``--only sp`` resolves (the rung rides
+    the uploaded smoke-bench artifact through that registry entry)."""
+    assert "sp" in dict(bench_run.MODULES)
+
+    derived = ("strategy=pair_allgather;collectives_per_pair=1;"
+               "per_direction_collectives=4;overlap_efficiency=0.035;"
+               "serial_us=90470.0;floor_us=6890.0;"
+               "exchange_exposed_us=83580.0;exchange_hidden_us=2920.0;"
+               "host_cores=8;wire_dtype=float32")
+    base = _payload([
+        ("sp_scaling/dev2_h64w64_us", 4000.0,
+         "strategy=ppermute;collective_bytes=2048;activation_bytes=65536;"
+         "ratio=0.03125;wire_dtype=float32"),
+        ("sp_scaling/overlap_dev2_h64w64_us", 9000.0, derived),
+        ("sp_scaling/overlap_hosts2_h64w64_us", 9500.0,
+         derived + ";hosts=2"),
+    ])
+    assert gate.compare(base, base).ok
+
+    cur = json.loads(json.dumps(base))
+    cur["rows"][1]["us_per_call"] *= 2.0
+    res = gate.compare(base, cur)
+    assert [r[0] for r in res.regressions] == \
+        ["sp_scaling/overlap_dev2_h64w64_us"]
+
+    skipped = json.loads(json.dumps(base))
+    skipped["rows"] = skipped["rows"][:2]      # multihost rung skipped
+    res = gate.compare(base, skipped)
+    assert res.ok
+    assert any("overlap_hosts2" in w for w in res.warnings)
+
+
 def test_tolerance_band_is_configurable():
     cur = json.loads(json.dumps(BASE))
     cur["rows"][0]["us_per_call"] *= 1.5

@@ -15,9 +15,16 @@ fixture.  Proves:
 * the graceful single-device fallback (no mesh ⇒ plain fused scan).
 """
 
+import pathlib
+import sys
+
 import pytest
 
 pytestmark = pytest.mark.distributed
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:          # benchmarks/ is a namespace package
+    sys.path.insert(0, str(ROOT))
 
 # Shared by the equivalence bodies: direction-stacked inputs in ORIGINAL
 # orientation (taps generated per oriented geometry, like the attention
@@ -54,7 +61,10 @@ _SETUP = """
 def test_sp_matches_single_device_all_directions(run_sub):
     """All four directions at once through directional_scan: forward and
     all five gradients, compact channel mode (cpw=3), scan lengths that do
-    NOT divide the 8-way mesh (H=21 vertical, W=12 horizontal)."""
+    NOT divide the 8-way mesh (H=21 vertical, W=12 horizontal).  "auto"
+    resolves the opposite-direction pairs to the fused single-collective
+    exchange; the explicit strategies exercise the per-direction
+    fallback knob — all three must match the single-device oracle."""
     run_sub(_SETUP + """
         mesh = make_mesh((8,), ("seq",))
         x, wl, wc, wr, lam = inputs(2, 3, 21, 12)
@@ -64,7 +74,7 @@ def test_sp_matches_single_device_all_directions(run_sub):
         g_ref = jax.grad(loss(ref_fn), argnums=(0, 1, 2, 3, 4))(
             x, wl, wc, wr, lam)
 
-        for strategy in ("ppermute", "allgather"):
+        for strategy in ("auto", "ppermute", "allgather"):
             sp_fn = lambda *a: G.directional_scan(
                 *a, G.DIRECTIONS, impl="sp", mesh=mesh,
                 sp_strategy=strategy)
@@ -371,3 +381,263 @@ def test_sp_single_device_fallback():
     ref = gspn_scan(x, wl, wc, wr, lam, impl="xla", chunk=3)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
+
+
+# Shared by the fused-pair bodies: direction-stacked pair inputs in the
+# ops.gspn_scan_pair layout (one stream, per-slot taps/lam; slot 0 scans
+# top→bottom, slot 1 bottom→top) plus the slot-wise reference.
+_PAIR_SETUP = _SETUP + """
+        from repro.kernels.ref import gspn_scan_ref
+        from repro.parallel.gspn_sp import (collectives_in_jaxpr,
+                                            gspn_scan_sp_pair)
+
+        def pair_inputs(gw, cpw, h, w, seed=0):
+            g = gw * cpw
+            ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+            x = jax.random.normal(ks[0], (g, h, w))
+            lam2 = jax.nn.sigmoid(jax.random.normal(ks[1], (2, g, h, w)))
+            wl2, wc2, wr2 = (
+                jnp.stack(t) for t in zip(
+                    G.normalize_taps(jax.random.normal(ks[2],
+                                                       (gw, h, w, 3))),
+                    G.normalize_taps(jax.random.normal(ks[3],
+                                                       (gw, h, w, 3)))))
+            return x, wl2, wc2, wr2, lam2
+
+        def pair_ref(x, wl2, wc2, wr2, lam2):
+            return jnp.stack([
+                gspn_scan_ref(x, wl2[0], wc2[0], wr2[0], lam2[0]),
+                gspn_scan_ref(x, wl2[1], wc2[1], wr2[1], lam2[1],
+                              reverse=True)])
+"""
+
+
+def test_sp_fused_pair_single_collective(run_sub):
+    """The tentpole's communication contract (ISSUE 10 acceptance): the
+    fused opposite-direction pair emits exactly ONE boundary collective —
+    a single all-gather of the stacked compact (T, b) states plus the
+    3 piggybacked adjoint edge weight rows, payload (2, G_w·W+G+3·G_w, W)
+    — down from 2 per-direction exchanges; zero ppermutes; the gradient
+    adds exactly one more fused exchange (its backward pair).  And the
+    fused path matches both the per-direction fallback and the slot-wise
+    reference to 1e-5 fwd / 1e-4 grad on compact (cpw=3) non-divisible
+    (h=21 on 8 blocks) shapes."""
+    run_sub(_PAIR_SETUP + """
+        mesh = make_mesh((8,), ("seq",))
+        gw, cpw, w, h = 2, 3, 8, 21
+        g = gw * cpw
+        args = pair_inputs(gw, cpw, h, w)
+
+        fused = lambda *a: gspn_scan_sp_pair(*a, mesh=mesh)
+        per_dir = lambda *a: gspn_scan_sp_pair(*a, mesh=mesh,
+                                               strategy="allgather")
+
+        # --- jaxpr pin: ONE collective forward (2 -> 1 per pair) ---
+        cs = collectives_in_jaxpr(fused, *args)
+        assert len(cs) == 1, cs
+        nm, shape, dtype = cs[0]
+        assert "all_gather" in nm and dtype == "float32", cs
+        assert shape == (2, gw * w + g + 3 * gw, w), cs
+        # the per-direction fallback pays 2 all-gathers per direction
+        pcs = collectives_in_jaxpr(per_dir, *args)
+        assert len(pcs) == 4 and all("all_gather" in c[0] for c in pcs), pcs
+
+        # --- gradient: 2 fused exchanges total (fwd + mirrored bwd),
+        # still zero ppermutes.  psum counts are NOT pinned here: they
+        # are shard_map transpose artifacts of the block-sharded
+        # cotangents, present identically in the per-direction path.
+        gfn = lambda f: jax.grad(lambda *a: jnp.sum(jnp.sin(f(*a))),
+                                 argnums=(0, 1, 2, 3, 4))
+        gcs = collectives_in_jaxpr(gfn(fused), *args)
+        ags = [c for c in gcs if "all_gather" in c[0]]
+        assert len(ags) == 2, gcs
+        assert not [c for c in gcs if c[0] == "ppermute"], gcs
+
+        # --- equivalence: fused vs reference and vs fallback ---
+        ref = pair_ref(*args)
+        out = jax.jit(fused)(*args)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(jax.jit(per_dir)(*args)),
+                                   np.asarray(ref), rtol=1e-5, atol=1e-5)
+        g_f = jax.jit(gfn(fused))(*args)
+        g_r = gfn(pair_ref)(*args)
+        check_tree(g_f, g_r, 1e-4, 1e-5)
+
+        # divisible blocks + per-channel taps through the same pin
+        args = pair_inputs(4, 1, 24, 8, seed=1)
+        cs = collectives_in_jaxpr(fused, *args)
+        assert len(cs) == 1 and "all_gather" in cs[0][0], cs
+        np.testing.assert_allclose(np.asarray(jax.jit(fused)(*args)),
+                                   np.asarray(pair_ref(*args)),
+                                   rtol=1e-5, atol=1e-5)
+        check_tree(jax.jit(gfn(fused))(*args), gfn(pair_ref)(*args),
+                   1e-4, 1e-5)
+    """, timeout=560)
+
+
+def test_sp_pair_exchange_modes(run_sub):
+    """The overlap rung's measurement knob: "serial" only inserts an
+    optimization barrier (gather must land before the local scan), so it
+    must be numerically IDENTICAL to production "overlap"; "skip" elides
+    the collective entirely (the timing floor) and must be WRONG across
+    blocks — and emit zero collectives."""
+    run_sub(_PAIR_SETUP + """
+        mesh = make_mesh((8,), ("seq",))
+        args = pair_inputs(2, 2, 24, 8)
+        ref = pair_ref(*args)
+
+        outs = {m: jax.jit(lambda *a, m=m: gspn_scan_sp_pair(
+                    *a, mesh=mesh, exchange_mode=m))(*args)
+                for m in ("overlap", "serial", "skip")}
+        np.testing.assert_allclose(np.asarray(outs["overlap"]),
+                                   np.asarray(ref), rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(outs["serial"]),
+                                      np.asarray(outs["overlap"]))
+        assert not np.allclose(np.asarray(outs["skip"]), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+        cs = collectives_in_jaxpr(
+            lambda *a: gspn_scan_sp_pair(*a, mesh=mesh,
+                                         exchange_mode="skip"), *args)
+        assert cs == [], cs
+
+        import pytest
+        with pytest.raises(ValueError):
+            gspn_scan_sp_pair(*args, mesh=mesh, exchange_mode="eager")
+    """, timeout=560)
+
+
+def test_sp_strategy_resolution_drift_pin():
+    """ISSUE 10 satellite: benchmarks/sp_scaling.py must measure the
+    strategy production resolves.  strategy_for delegates to
+    SPConfig.resolved_strategy — this pin fails if anyone ever
+    re-introduces a local copy of the auto rule and lets it drift."""
+    from benchmarks.sp_scaling import strategy_for
+
+    from repro.parallel.gspn_sp import PPERMUTE_MAX_BLOCKS, SPConfig
+
+    for n in range(1, 17):
+        for pair in (False, True):
+            assert strategy_for(n, pair=pair) == \
+                SPConfig(n_blocks=n).resolved_strategy(pair=pair), n
+        # the auto rule itself, pinned concretely
+        assert strategy_for(n) == (
+            "ppermute" if n <= PPERMUTE_MAX_BLOCKS else "allgather"), n
+        assert strategy_for(n, pair=True) == "pair_allgather", n
+
+    # explicit strategies are honoured; the pair-only strategy degrades
+    # to its single-direction form and vice versa
+    assert SPConfig(n_blocks=8,
+                    strategy="ppermute").resolved_strategy() == "ppermute"
+    assert SPConfig(n_blocks=2,
+                    strategy="allgather").resolved_strategy() == "allgather"
+    assert SPConfig(n_blocks=8, strategy="pair_allgather") \
+        .resolved_strategy() == "allgather"
+    assert SPConfig(n_blocks=8, strategy="allgather") \
+        .resolved_strategy(pair=True) == "allgather"
+    assert SPConfig(n_blocks=8, strategy="pair_allgather") \
+        .resolved_strategy(pair=True) == "pair_allgather"
+
+
+def test_sp_collective_byte_accounting(run_sub):
+    """ISSUE 10 satellite: the analytic ``collective_bytes`` model in the
+    sp_scaling ladder must equal the bytes of the collectives ACTUALLY
+    emitted in the jaxpr — per-op payload for ppermute hops, K× the
+    gathered shard for all-gathers — for both strategies × both wire
+    dtypes × fused-pair vs per-direction.  Every boundary payload must
+    cross the wire in the configured boundary_dtype."""
+    run_sub(_PAIR_SETUP + f"""
+        import sys
+        sys.path.insert(0, {str(ROOT)!r})
+    """ + """
+        from benchmarks.sp_scaling import collective_bytes
+        from repro.parallel.gspn_sp import gspn_scan_sp
+
+        k = 8
+        mesh = make_mesh((k,), ("seq",))
+        gw, cpw, w, h = 2, 3, 8, 24
+        g = gw * cpw
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = jax.random.normal(ks[0], (g, h, w))
+        lam = jax.nn.sigmoid(jax.random.normal(ks[1], (g, h, w)))
+        wl, wc, wr = G.normalize_taps(
+            jax.random.normal(ks[2], (gw, h, w, 3)))
+        pargs = pair_inputs(gw, cpw, h, w)
+
+        def emitted_bytes(wire, fn, *args):
+            total = 0
+            for nm, shape, dtype in collectives_in_jaxpr(fn, *args):
+                assert dtype == wire, (nm, shape, dtype)
+                n = int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+                total += k * n if "all_gather" in nm else n
+            return total
+
+        for wire, wb in (("float32", 4), ("bfloat16", 2)):
+            # single direction, both per-direction strategies
+            for strategy in ("ppermute", "allgather"):
+                got = emitted_bytes(
+                    wire, lambda *a, s=strategy: gspn_scan_sp(
+                        *a, mesh=mesh, strategy=s, boundary_dtype=wire),
+                    x, wl, wc, wr, lam)
+                assert got == collective_bytes(k, gw, g, w, strategy, wb), \
+                    (wire, strategy, got)
+            # fused pair: ONE collective carrying the whole model
+            got = emitted_bytes(
+                wire, lambda *a: gspn_scan_sp_pair(
+                    *a, mesh=mesh, boundary_dtype=wire), *pargs)
+            assert got == collective_bytes(k, gw, g, w,
+                                           "pair_allgather", wb), \
+                (wire, got)
+            # per-direction fallback pays the single-direction model TWICE
+            for strategy in ("ppermute", "allgather"):
+                got = emitted_bytes(
+                    wire, lambda *a, s=strategy: gspn_scan_sp_pair(
+                        *a, mesh=mesh, strategy=s, boundary_dtype=wire),
+                    *pargs)
+                assert got == 2 * collective_bytes(k, gw, g, w,
+                                                   strategy, wb), \
+                    (wire, strategy, got)
+    """, timeout=560)
+
+
+def test_sp_bf16_wire_chain_vs_allgather(run_sub):
+    """Pins the bf16-wire divergence bound of both exchange strategies
+    against the f32 reference.  The masked-send chain quantizes only the
+    consumed boundary path (K-1 column round trips, but every
+    ``_apply_transfer`` matvec uses the LOCAL f32 operator), while the
+    all-gather quantizes each payload once but ships the (W, W) transfer
+    operators themselves over the bf16 wire — so the two land in the
+    same error band, and neither may drift an order of magnitude from
+    the other.  f32 wire must stay exact for both."""
+    run_sub(_SETUP + """
+        from repro.kernels.ref import gspn_scan_ref
+        from repro.parallel.gspn_sp import gspn_scan_sp
+
+        mesh = make_mesh((8,), ("seq",))
+        gw, cpw, w, h = 2, 3, 8, 24
+        g = gw * cpw
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = jax.random.normal(ks[0], (g, h, w))
+        lam = jax.nn.sigmoid(jax.random.normal(ks[1], (g, h, w)))
+        wl, wc, wr = G.normalize_taps(
+            jax.random.normal(ks[2], (gw, h, w, 3)))
+        args = (x, wl, wc, wr, lam)
+        ref = np.asarray(gspn_scan_ref(*args))
+
+        def err(strategy, wire):
+            out = jax.jit(lambda *a: gspn_scan_sp(
+                *a, mesh=mesh, strategy=strategy,
+                boundary_dtype=wire))(*args)
+            return float(np.max(np.abs(np.asarray(out) - ref)))
+
+        # f32 wire: both strategies exact to scan tolerance
+        assert err("ppermute", "float32") < 1e-5
+        assert err("allgather", "float32") < 1e-5
+
+        # bf16 wire: real but bounded quantization, same band for both
+        e_ag = err("allgather", "bfloat16")
+        e_ch = err("ppermute", "bfloat16")
+        assert 1e-6 < e_ag < 0.03, e_ag
+        assert 1e-6 < e_ch < 0.03, e_ch
+        assert e_ch < 10 * e_ag and e_ag < 10 * e_ch, (e_ag, e_ch)
+    """, timeout=560)

@@ -1,0 +1,139 @@
+"""2-host multi-process mesh lane (DESIGN.md §8, ISSUE 10 tentpole).
+
+Two coordinated subprocesses — one forced CPU device each — initialise a
+real ``jax.distributed`` runtime through the ``repro.compat`` shims
+(which select the gloo cross-process collective transport before
+``jax.distributed.initialize``), build a 2-way ``seq`` mesh whose axis
+spans the PROCESS boundary, and run the fused opposite-direction pair
+through it.  Proves the production claim on an actual multi-host mesh:
+
+* the fused pair still emits exactly ONE boundary collective;
+* every addressable output shard matches the single-host reference;
+* the sp_scaling ``overlap`` rung's mesh construction (global arrays via
+  ``make_array_from_callback``) is exercised end to end.
+
+Runtimes without a working gloo transport (or that cannot bind the
+loopback coordinator) skip rather than fail — same contract as the
+``run_sub`` probe.
+"""
+
+import socket
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.distributed
+
+N_PROCS = 2
+
+# Error signatures of a runtime that cannot do multi-process CPU
+# collectives at all — skip, don't fail.  Anything else is a real bug.
+_SKIP_MARKERS = (
+    "Multiprocess computations aren't implemented",
+    "jax.distributed is not available",
+    "DEADLINE_EXCEEDED",
+    "UNAVAILABLE",
+    "failed to connect",
+    "gloo",
+)
+
+_CHILD = textwrap.dedent("""
+    import os, sys
+    # APPENDED so it wins: on duplicated XLA flags the LAST occurrence
+    # applies, and the inherited env may already force a device count
+    # (importing repro.launch.dryrun in the pytest parent sets 512).
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=1")
+    proc_id, port = int(sys.argv[1]), int(sys.argv[2])
+
+    from repro import compat
+    compat.distributed_initialize(f"localhost:{port}", 2, proc_id)
+
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    assert jax.process_count() == 2, jax.process_count()
+    assert jax.device_count() == 2, jax.device_count()
+
+    from repro.core import gspn as G
+    from repro.kernels.ref import gspn_scan_ref
+    from repro.launch.mesh import make_sp_mesh
+    from repro.parallel.gspn_sp import (collectives_in_jaxpr,
+                                        gspn_scan_sp_pair)
+
+    mesh = make_sp_mesh(2)
+    gw, cpw, w, h = 2, 2, 8, 12
+    g = gw * cpw
+    # Same seeds on both processes -> identical host-local values; wrap
+    # as GLOBAL arrays sharded over the cross-process seq axis.
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (g, h, w))
+    lam2 = jax.nn.sigmoid(jax.random.normal(ks[1], (2, g, h, w)))
+    wl2, wc2, wr2 = (
+        jnp.stack(t) for t in zip(
+            G.normalize_taps(jax.random.normal(ks[2], (gw, h, w, 3))),
+            G.normalize_taps(jax.random.normal(ks[3], (gw, h, w, 3)))))
+    host_args = (x, wl2, wc2, wr2, lam2)
+    specs = (P(None, "seq", None),) + (P(None, None, "seq", None),) * 4
+    args = tuple(
+        jax.make_array_from_callback(
+            a.shape, NamedSharding(mesh, s),
+            lambda idx, a=a: np.asarray(a)[idx])
+        for a, s in zip(host_args, specs))
+
+    # ONE boundary collective, even across real process boundaries.
+    cs = collectives_in_jaxpr(
+        lambda *a: gspn_scan_sp_pair(*a, mesh=mesh), *args)
+    assert len(cs) == 1 and "all_gather" in cs[0][0], cs
+    assert cs[0][1] == (2, gw * w + g + 3 * gw, w), cs
+
+    out = jax.jit(lambda *a: gspn_scan_sp_pair(*a, mesh=mesh))(*args)
+
+    # Shard-by-shard equivalence with the single-host reference: each
+    # process checks exactly the rows it owns.
+    want = np.stack([
+        np.asarray(gspn_scan_ref(x, wl2[0], wc2[0], wr2[0], lam2[0])),
+        np.asarray(gspn_scan_ref(x, wl2[1], wc2[1], wr2[1], lam2[1],
+                                 reverse=True))])
+    shards = out.addressable_shards
+    assert shards, "process owns no output shard"
+    for sh in shards:
+        np.testing.assert_allclose(np.asarray(sh.data), want[sh.index],
+                                   rtol=1e-5, atol=1e-5)
+    print(f"MULTIHOST_OK proc={proc_id}", flush=True)
+    compat.distributed_shutdown()
+""")
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def test_two_process_fused_pair_single_collective():
+    port = _free_port()
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", _CHILD, str(i), str(port)],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        for i in range(N_PROCS)
+    ]
+    outs = []
+    for p in procs:
+        try:
+            outs.append(p.communicate(timeout=560))
+        except subprocess.TimeoutExpired:
+            p.kill()
+            outs.append(p.communicate())
+    if any(p.returncode != 0 for p in procs):
+        blob = "\n".join(o[0] + o[1] for o in outs)
+        if any(m in blob for m in _SKIP_MARKERS):
+            pytest.skip("multi-process CPU collectives unavailable: "
+                        + blob.strip().splitlines()[-1][-200:])
+        assert False, "\n\n".join(
+            f"proc {i} rc={p.returncode}\nSTDOUT:\n{o[0]}\nSTDERR:\n{o[1]}"
+            for i, (p, o) in enumerate(zip(procs, outs)))
+    for i, (out, _err) in enumerate(outs):
+        assert f"MULTIHOST_OK proc={i}" in out, outs
